@@ -1,0 +1,299 @@
+"""Benchmark harness — one function per paper table/claim + the deferred
+quantitative study.  Prints ``name,us_per_call,derived`` CSV rows.
+
+  table3_clearing        §4.5 worked example: exact reproduction + clearing latency
+  wis_scaling            §4.6 O(M log M) clearing complexity
+  lambda_policy          Table 2: λ ∈ {0.3, 0.5, 0.7} qualitative effects
+  scheduler_comparison   §6(a) deferred study: JASDA vs FIFO/EASY/best-fit/auction
+  calibration            §4.2.1: misreporting detection + win-rate suppression
+  age_fairness           §4.3: β_age sweep vs starvation
+  window_policies        §5.1(c): announcement-policy ablation
+  atomization_ft         SJA thesis: work lost under failures vs monolithic
+  kernels                per-kernel µs/call (CPU interpret / reference paths)
+
+Run: PYTHONPATH=src python -m benchmarks.run [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.2f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def _time(fn: Callable, n: int = 5, warmup: int = 1) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+# ---------------------------------------------------------------------------
+# §4.5 Table 3
+# ---------------------------------------------------------------------------
+
+def bench_table3_clearing():
+    from repro.core.wis import wis_select
+    starts, ends = [40, 47, 40], [47, 50, 50]
+    scores = [0.67, 0.64, 0.72]
+    sel, total = wis_select(starts, ends, scores)
+    ok = set(sel.tolist()) == {0, 1} and abs(total - 1.31) < 1e-9
+    us = _time(lambda: wis_select(starts, ends, scores), n=200)
+    emit("table3_clearing", us,
+         f"selected={{v_A1;v_A2}} total={total:.2f} paper_match={ok}")
+
+
+# ---------------------------------------------------------------------------
+# §4.6 complexity
+# ---------------------------------------------------------------------------
+
+def bench_wis_scaling():
+    from repro.core.wis import wis_select
+    rng = np.random.default_rng(0)
+    prev = None
+    for m in (256, 1024, 4096, 16384, 65536):
+        starts = rng.uniform(0, 1000, m)
+        ends = starts + rng.uniform(0.5, 30, m)
+        w = rng.uniform(0, 1, m)
+        us = _time(lambda: wis_select(starts, ends, w), n=3)
+        ratio = us / prev if prev else float("nan")
+        prev = us
+        emit(f"wis_scaling_M{m}", us,
+             f"x{ratio:.2f}_vs_prev(4x_M; ~4-5x=loglinear)")
+
+
+# ---------------------------------------------------------------------------
+# shared simulator scenarios
+# ---------------------------------------------------------------------------
+
+def _hetero_slices():
+    from repro.core import SliceSpec
+    GB = 1 << 30
+    return ([SliceSpec("s20", 20 * GB, n_chips=4),
+             SliceSpec("s10a", 10 * GB, n_chips=2),
+             SliceSpec("s10b", 10 * GB, n_chips=2)]
+            + [SliceSpec(f"s5{i}", 5 * GB, n_chips=1) for i in range(4)])
+
+
+def _workload(n=240, seed=1, **kw):
+    from repro.core import make_workload
+    kw.setdefault("arrival_rate", 0.25)
+    kw.setdefault("work_range", (20.0, 150.0))
+    kw.setdefault("mem_range_gb", (1.0, 14.0))
+    return make_workload(n, seed=seed, **kw)
+
+
+def _run(sched_factory, *, sim_seed=2, t_end=6000.0, failure_rate=0.0,
+         n=240, wl_kw=None):
+    from repro.core import SimConfig, simulate
+    t0 = time.perf_counter()
+    res = simulate(sched_factory(), _workload(n, **(wl_kw or {})),
+                   SimConfig(t_end=t_end, seed=sim_seed,
+                             failure_rate=failure_rate))
+    wall = (time.perf_counter() - t0) * 1e6
+    return res, wall
+
+
+# ---------------------------------------------------------------------------
+# Table 2: λ sweep
+# ---------------------------------------------------------------------------
+
+def bench_lambda_policy():
+    from repro.core import JasdaScheduler, ScoringPolicy
+    from repro.core.scheduler import SchedulerConfig
+    for lam, label in ((0.3, "utilization-first"), (0.5, "balanced"),
+                       (0.7, "qos-first")):
+        mk = lambda lam=lam: JasdaScheduler(
+            _hetero_slices(), SchedulerConfig(scoring=ScoringPolicy(lam=lam)))
+        res, wall = _run(mk)
+        emit(f"lambda_{lam}", wall,
+             f"{label}: util={res.utilization:.3f} meanJCT={res.mean_jct:.0f} "
+             f"p95={res.p95_jct:.0f} jain={res.jain_slowdown:.3f}")
+
+
+# ---------------------------------------------------------------------------
+# §6(a): the deferred comparison study
+# ---------------------------------------------------------------------------
+
+def bench_scheduler_comparison():
+    from repro.core import JasdaScheduler
+    from repro.core.baselines import (AuctionScheduler, BackfillScheduler,
+                                      BestFitScheduler, FifoScheduler)
+    systems = [("jasda", lambda: JasdaScheduler(_hetero_slices()))] + [
+        (c.name, (lambda c=c: c(_hetero_slices())))
+        for c in (FifoScheduler, BackfillScheduler, BestFitScheduler,
+                  AuctionScheduler)]
+    for name, mk in systems:
+        res, wall = _run(mk)
+        emit(f"compare_{name}", wall,
+             f"util={res.utilization:.3f} meanJCT={res.mean_jct:.0f} "
+             f"p95={res.p95_jct:.0f} jain={res.jain_slowdown:.3f} "
+             f"finished={res.n_finished}/{res.n_jobs}")
+
+
+def bench_atomization_ft():
+    """Fault tolerance: atomization (JASDA) vs whole-job restart baselines."""
+    from repro.core import JasdaScheduler
+    from repro.core.baselines import BackfillScheduler
+    for rate in (0.001, 0.003, 0.006):
+        for name, mk in (("jasda", lambda: JasdaScheduler(_hetero_slices())),
+                         ("backfill", lambda: BackfillScheduler(_hetero_slices()))):
+            res, wall = _run(mk, failure_rate=rate, t_end=9000.0)
+            emit(f"ft_{name}_fail{rate}", wall,
+                 f"meanJCT={res.mean_jct:.0f} p95={res.p95_jct:.0f} "
+                 f"finished={res.n_finished}/{res.n_jobs}")
+
+
+# ---------------------------------------------------------------------------
+# §4.2.1 calibration
+# ---------------------------------------------------------------------------
+
+def bench_calibration():
+    from repro.core import CalibrationConfig, JasdaScheduler, SimConfig, simulate
+    from repro.core.scheduler import SchedulerConfig
+    for label, cal in (
+        ("off", CalibrationConfig(mode="fixed", gamma=1.0)),
+        ("k3", CalibrationConfig(mode="reliability", kappa=3.0)),
+        ("k6", CalibrationConfig(mode="reliability", kappa=6.0)),
+    ):
+        sched = JasdaScheduler(_hetero_slices(),
+                               SchedulerConfig(calibration=cal))
+        agents = _workload(160, seed=3, misreport_fraction=0.5,
+                           misreport_factor=1.8)
+        t0 = time.perf_counter()
+        simulate(sched, agents, SimConfig(t_end=6000.0, seed=2))
+        wall = (time.perf_counter() - t0) * 1e6
+        snap = sched.calibrator.snapshot()
+        mis = [s["rho"] for j, s in snap.items()
+               if sched.agents.get(j) and sched.agents[j].cfg.misreport > 1]
+        hon = [s["rho"] for j, s in snap.items()
+               if sched.agents.get(j) and sched.agents[j].cfg.misreport <= 1]
+        wins_mis = np.mean([a.n_wins for a in sched.agents.values()
+                            if a.cfg.misreport > 1])
+        wins_hon = np.mean([a.n_wins for a in sched.agents.values()
+                            if a.cfg.misreport <= 1])
+        emit(f"calibration_{label}", wall,
+             f"rho_honest={np.mean(hon):.3f} rho_misrep={np.mean(mis):.3f} "
+             f"wins_ratio_mis/hon={wins_mis/max(wins_hon,1e-9):.2f}")
+
+
+# ---------------------------------------------------------------------------
+# §4.3 age / fairness
+# ---------------------------------------------------------------------------
+
+def bench_age_fairness():
+    from repro.core import JasdaScheduler, ScoringPolicy
+    from repro.core.scheduler import SchedulerConfig
+    for b_age in (0.0, 0.2, 0.4):
+        betas = {"utilization": 0.4 - b_age / 2, "slack": 0.1,
+                 "mem_headroom": 0.05, "energy": 0.05, "age": b_age}
+        mk = lambda b=betas: JasdaScheduler(
+            _hetero_slices(),
+            SchedulerConfig(scoring=ScoringPolicy(lam=0.5, betas=b)))
+        res, wall = _run(mk)
+        emit(f"age_beta{b_age}", wall,
+             f"p95JCT={res.p95_jct:.0f} jain={res.jain_slowdown:.3f} "
+             f"meanJCT={res.mean_jct:.0f}")
+
+
+# ---------------------------------------------------------------------------
+# §5.1(c) window announcement policies
+# ---------------------------------------------------------------------------
+
+def bench_window_policies():
+    from repro.core import JasdaScheduler
+    from repro.core.scheduler import SchedulerConfig
+    from repro.core.windows import WindowPolicy
+    for kind in ("earliest", "largest", "best_fit", "slack"):
+        mk = lambda k=kind: JasdaScheduler(
+            _hetero_slices(), SchedulerConfig(window=WindowPolicy(kind=k)))
+        res, wall = _run(mk)
+        emit(f"window_{kind}", wall,
+             f"util={res.utilization:.3f} meanJCT={res.mean_jct:.0f} "
+             f"jain={res.jain_slowdown:.3f}")
+
+
+# ---------------------------------------------------------------------------
+# kernels (CPU timings: interpret for pallas paths, XLA for refs)
+# ---------------------------------------------------------------------------
+
+def bench_kernels():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.flash_attention.ref import mha_reference
+    from repro.kernels.linear_scan.ref import linear_scan_associative
+    from repro.kernels.jasda_score.ops import score_variants
+    from repro.kernels.wis_dp.ops import wis_clear
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 4, 512, 64))
+    k = jax.random.normal(ks[1], (1, 2, 512, 64))
+    v = jax.random.normal(ks[2], (1, 2, 512, 64))
+    f = jax.jit(lambda q, k, v: mha_reference(q, k, v))
+    us = _time(lambda: jax.block_until_ready(f(q, k, v)), n=10)
+    emit("kernel_attention_ref_512", us, "B1H4S512D64 (XLA oracle path)")
+
+    a = jax.random.uniform(ks[0], (2, 1024, 256), jnp.float32, 0.9, 0.999)
+    b = jax.random.normal(ks[1], (2, 1024, 256))
+    f2 = jax.jit(lambda a, b: linear_scan_associative(a, b)[0])
+    us = _time(lambda: jax.block_until_ready(f2(a, b)), n=10)
+    emit("kernel_linear_scan_assoc_1024", us, "B2T1024D256")
+
+    rng = np.random.default_rng(0)
+    m, t = 512, 64
+    args = (rng.uniform(0, 1, (m, 3)).astype(np.float32),
+            rng.uniform(0, 1, (m, 3)).astype(np.float32),
+            np.array([.5, .3, .2], np.float32),
+            np.array([.4, .2, .2], np.float32),
+            rng.uniform(5, 19, (m, t)).astype(np.float32),
+            rng.uniform(0, .5, (m, t)).astype(np.float32))
+    us = _time(lambda: score_variants(*args, lam=.6, capacity=20., theta=.05,
+                                      impl="ref"), n=10)
+    emit("kernel_jasda_score_M512", us, f"M={m} T={t} (paper hot loop)")
+
+    starts = rng.uniform(0, 1000, 2048)
+    ends = starts + rng.uniform(1, 30, 2048)
+    w = rng.uniform(0, 1, 2048)
+    us = _time(lambda: wis_clear(starts, ends, w, impl="ref"), n=5)
+    emit("kernel_wis_clear_M2048", us, "sort+DP+backtrack")
+
+
+# ---------------------------------------------------------------------------
+
+BENCHES: Dict[str, Callable] = {
+    "table3_clearing": bench_table3_clearing,
+    "wis_scaling": bench_wis_scaling,
+    "lambda_policy": bench_lambda_policy,
+    "scheduler_comparison": bench_scheduler_comparison,
+    "calibration": bench_calibration,
+    "age_fairness": bench_age_fairness,
+    "window_policies": bench_window_policies,
+    "atomization_ft": bench_atomization_ft,
+    "kernels": bench_kernels,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, fn in BENCHES.items():
+        if args.only and args.only != name:
+            continue
+        fn()
+
+
+if __name__ == "__main__":
+    main()

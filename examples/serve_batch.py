@@ -1,0 +1,55 @@
+"""Batched serving example: continuous batching over a slot-based KV cache.
+
+Spins up a small decoder, submits a burst of requests with different prompt
+lengths, and streams them through 4 shared slots — requests queue, claim
+slots, decode together at mixed positions, and free slots on completion.
+
+Run: PYTHONPATH=src python examples/serve_batch.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import Model, ModelConfig
+from repro.serving import Request, ServeConfig, ServingEngine
+
+
+def main():
+    cfg = ModelConfig(name="serve-demo", family="dense", n_layers=4,
+                      d_model=128, n_heads=8, n_kv_heads=4, d_ff=256,
+                      vocab_size=1024, model_axis_size=1, dtype=jnp.float32)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    eng = ServingEngine(model, params,
+                        ServeConfig(batch_slots=4, max_seq=128))
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(10):
+        prompt = rng.integers(0, cfg.vocab_size, size=rng.integers(4, 24))
+        reqs.append(Request(f"req-{i:02d}", prompt.astype(np.int32),
+                            max_new_tokens=16))
+        eng.submit(reqs[-1])
+
+    t0 = time.perf_counter()
+    steps = 0
+    while True:
+        active = eng.step()
+        steps += 1
+        if active == 0 and not eng.queue:
+            break
+    wall = time.perf_counter() - t0
+
+    total_tokens = sum(len(r.output) for r in reqs)
+    print(f"{len(reqs)} requests, {total_tokens} tokens generated in "
+          f"{steps} engine steps ({wall:.2f}s, "
+          f"{total_tokens / wall:.1f} tok/s on CPU)")
+    for r in reqs[:3]:
+        print(f"  {r.request_id}: prompt[{len(r.prompt)}] → {r.output}")
+    assert all(r.done for r in reqs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Sharded atomic async checkpointing."""
+from .store import CheckpointStore  # noqa: F401

@@ -1,0 +1,3 @@
+"""Assigned architecture configs + shapes (one module per arch)."""
+from .registry import ARCH_NAMES, ArchInfo, get, reduced  # noqa: F401
+from .shapes import SHAPES, Shape, batch_specs, input_specs  # noqa: F401

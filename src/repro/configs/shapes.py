@@ -1,0 +1,181 @@
+"""Assigned input shapes and per-cell input specs (ShapeDtypeStruct).
+
+The four LM shapes from the assignment:
+  train_4k     seq 4,096   global_batch 256   → train_step
+  prefill_32k  seq 32,768  global_batch 32    → prefill
+  decode_32k   seq 32,768  global_batch 128   → decode_step (cache = seq_len)
+  long_500k    seq 524,288 global_batch 1     → decode_step, sub-quadratic
+                                                 archs only (DESIGN §4)
+
+``input_specs`` returns sharded jax.ShapeDtypeStruct stand-ins for every
+input of the lowered function — weak-type-correct, shardable, and never
+allocated.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+from ..distributed.sharding import ShardingRules
+from ..models.config import ModelConfig
+from ..models.model import Model
+
+__all__ = ["Shape", "SHAPES", "input_specs", "batch_specs"]
+
+
+@dataclass(frozen=True)
+class Shape:
+    name: str
+    kind: str  # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, Shape] = {
+    "train_4k": Shape("train_4k", "train", 4096, 256),
+    "prefill_32k": Shape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": Shape("decode_32k", "decode", 32768, 128),
+    "long_500k": Shape("long_500k", "decode", 524288, 1),
+}
+
+
+def _sds(shape, dtype, mesh, spec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _memory_shape(cfg: ModelConfig, batch: int) -> Optional[Tuple[int, int, int]]:
+    """Modality-stub memory input (frames/patches), already embedded."""
+    if cfg.family == "encdec":
+        return (batch, cfg.encoder_seq, cfg.d_model)
+    if cfg.family == "vlm":
+        return (batch, cfg.vision_seq, cfg.d_model)
+    return None
+
+
+def batch_specs(cfg: ModelConfig, shape: Shape, rules: ShardingRules):
+    """Train/prefill batch input specs."""
+    mesh = rules.mesh
+    b_axes = rules.batch_axes if rules.batch_axes else None
+    tok = _sds((shape.batch, shape.seq), jnp.int32, mesh, PS(b_axes, None))
+    out = {"tokens": tok}
+    if shape.kind == "train":
+        out["labels"] = _sds((shape.batch, shape.seq), jnp.int32, mesh,
+                             PS(b_axes, None))
+    mem = _memory_shape(cfg, shape.batch)
+    if mem is not None:
+        out["memory"] = _sds(mem, jnp.bfloat16, mesh, PS(b_axes, None, None))
+    return out
+
+
+def _shard_like(tree, rules: ShardingRules, kind_fn):
+    """Attach NamedShardings to an eval_shape pytree via a kind function."""
+    mesh = rules.mesh
+
+    def one(path, leaf):
+        spec = kind_fn(path, leaf)
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def _guard(spec_entries, shape, mesh):
+    """Drop axis entries that do not divide the dim (mirror of rules.act)."""
+    out = []
+    for dim, entry in zip(shape, spec_entries):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(entry if dim % size == 0 else None)
+    return PS(*out)
+
+
+def cache_specs(cfg: ModelConfig, shape: Shape, rules: ShardingRules,
+                kv_dtype=None):
+    """Sharded SDS pytree for the decode cache (never allocated)."""
+    model = Model(cfg)
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(shape.batch, shape.seq, dtype=kv_dtype))
+    b = rules.batch_axes if rules.batch_axes else None
+    m = rules.model_axes if rules.model_axes else None
+    mesh = rules.mesh
+
+    def kind_fn(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        leafname = names[-1]
+        nd = len(leaf.shape)
+        if leafname in ("k", "v"):
+            # (L, B, T, Hkv, hd)
+            if rules.shard_kv_seq:
+                entries = (None, b, m, None, None)
+            elif rules.attn_shard == "heads" and rules.kv_heads_shardable:
+                entries = (None, b, None, m, None)
+            elif rules.attn_shard == "headdim":
+                entries = (None, b, None, None, m)
+            else:
+                entries = (None, b, None, None, None)
+        elif leafname == "slot_pos":
+            entries = (None, b, m if rules.shard_kv_seq else None)
+        elif leafname == "conv":
+            entries = (None, b, None, m)  # (L, B, K-1, Dm)
+        elif leafname == "ssm":
+            entries = (None, b, m, None)  # (L, B, Dm, N)
+        elif leafname == "h":
+            entries = (None, b, m)  # (L, B, Dr)
+        else:
+            entries = (None,) * nd
+        return _guard(entries[:nd], leaf.shape, mesh)
+
+    return _shard_like(cache_shape, rules, kind_fn)
+
+
+def cross_stack_specs(cfg: ModelConfig, shape: Shape, rules: ShardingRules):
+    """SDS for precomputed cross-attn K/V (encdec/vlm decode input)."""
+    if cfg.family == "encdec":
+        t, n = cfg.encoder_seq, cfg.n_layers
+    elif cfg.family == "vlm":
+        t, n = cfg.vision_seq, cfg.n_super
+    else:
+        return None
+    b = rules.batch_axes if rules.batch_axes else None
+    m = rules.model_axes if rules.model_axes else None
+    mesh = rules.mesh
+    if rules.attn_shard == "heads" and rules.kv_heads_shardable:
+        entries = (None, b, None, m, None)
+    elif rules.attn_shard == "headdim":
+        entries = (None, b, None, None, m)
+    else:
+        entries = (None, b, None, None, None)
+    kv_shape = (n, shape.batch, t, cfg.n_kv_heads, cfg.hd)
+    spec = _guard(entries, kv_shape, mesh)
+    sds = jax.ShapeDtypeStruct(kv_shape, cfg.dtype,
+                               sharding=NamedSharding(mesh, spec))
+    return {"k": sds, "v": sds}
+
+
+def input_specs(cfg: ModelConfig, shape: Shape, rules: ShardingRules,
+                kv_dtype=None) -> Dict[str, Any]:
+    """All inputs for the cell's lowered function, as sharded SDS."""
+    mesh = rules.mesh
+    b = rules.batch_axes if rules.batch_axes else None
+    if shape.kind in ("train", "prefill"):
+        return batch_specs(cfg, shape, rules)
+    # decode: one new token against a filled cache
+    out = {
+        "token": _sds((shape.batch,), jnp.int32, mesh, PS(b)),
+        "index": _sds((shape.batch,), jnp.int32, mesh, PS(b)),
+        "cache": cache_specs(cfg, shape, rules, kv_dtype=kv_dtype),
+    }
+    cross = cross_stack_specs(cfg, shape, rules)
+    if cross is not None:
+        out["cross_stack"] = cross
+    return out

@@ -1,0 +1,57 @@
+"""JASDA core: the paper's contribution (§3–§4) as a composable library.
+
+Layer map (paper section → module):
+  §3.1 window announcement      → windows
+  §3.2 TRP/FMP + variants       → trp, types
+  §3.2–3.3 job-side bidding     → jobs, atomizer
+  §4.2 scoring model            → scoring
+  §4.2.1 calibration/trust      → calibration
+  §4.3 temporal fairness        → fairness
+  §4.4 WIS clearing             → wis, clearing
+  §3/§4 interaction cycle       → scheduler
+  §6(a) quantitative study      → simulator, baselines
+"""
+from .types import (  # noqa: F401
+    ClearingResult,
+    Commitment,
+    JobSpec,
+    JobState,
+    SliceSpec,
+    Variant,
+    Window,
+    variants_to_arrays,
+)
+from .trp import (  # noqa: F401
+    Phase,
+    PhaseFMP,
+    fmp_from_model,
+    fmp_standard,
+    fmp_static,
+    is_safe,
+    predict_duration,
+    prob_exceed_grid,
+    prob_exceed_union,
+)
+from .scoring import (  # noqa: F401
+    POLICY_BALANCED,
+    POLICY_QOS_FIRST,
+    POLICY_UTILIZATION_FIRST,
+    ScoringPolicy,
+    composite_score,
+    score_pool,
+)
+from .wis import wis_brute_force, wis_select, wis_select_jax  # noqa: F401
+from .calibration import CalibrationConfig, Calibrator, per_variant_error, reliability  # noqa: F401
+from .fairness import AgePolicy, AgeTracker, jain_index  # noqa: F401
+from .windows import SliceTimeline, WindowPolicy, announce_window  # noqa: F401
+from .atomizer import AtomizerConfig, ChunkPlan, chunk_candidates  # noqa: F401
+from .jobs import AgentConfig, JobAgent  # noqa: F401
+from .clearing import clear_window  # noqa: F401
+from .scheduler import JasdaScheduler, SchedulerConfig  # noqa: F401
+from .simulator import SimConfig, SimResult, make_workload, simulate  # noqa: F401
+from .baselines import (  # noqa: F401
+    AuctionScheduler,
+    BackfillScheduler,
+    BestFitScheduler,
+    FifoScheduler,
+)

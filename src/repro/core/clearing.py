@@ -1,0 +1,76 @@
+"""Per-window clearing (paper §4.4, Algorithm 1).
+
+One JASDA iteration over an announced window w*:
+
+    1:  announce w* to all jobs
+    4:  each job generates eligible variants V_i (jobs.py)
+    6-8: Score(v) = λ ĥ(v) + (1−λ) f̃_sys(v)   (scoring.py + calibration.py)
+    11: V = ∪ V_i
+    12: Ŝ = SelectBestCompatibleVariants(V, Score)   (wis.py — optimal WIS)
+    13: commit Ŝ, update layout and statistics
+
+The function is pure given its inputs; state mutation (commit, age updates,
+calibration) is the scheduler's job.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Mapping, Optional, Sequence
+
+import numpy as np
+
+from .scoring import ScoringPolicy, score_pool
+from .types import ClearingResult, Variant, Window
+from .wis import wis_select
+
+__all__ = ["clear_window"]
+
+
+def clear_window(
+    window: Window,
+    variants: Sequence[Variant],
+    policy: ScoringPolicy,
+    *,
+    ages: Optional[Mapping[str, float]] = None,
+    calibrate: Optional[Callable[[Variant, float], float]] = None,
+    extra_sys: Optional[Callable[[Variant], Mapping[str, float]]] = None,
+    selector: Callable = wis_select,
+) -> ClearingResult:
+    """Score the pooled bids and clear w* optimally (Algorithm 1 lines 6–12).
+
+    ``selector`` is pluggable so benchmarks can swap the numpy DP for the
+    JAX/Pallas paths; all return identical selections (tested).
+    """
+    variants = [v for v in variants if _fits(v, window)]
+    if not variants:
+        return ClearingResult(
+            window=window, selected=(), scores=(), total_score=0.0, n_bids=0
+        )
+
+    scores = score_pool(
+        variants, window, policy, ages=ages, calibrate=calibrate, extra_sys=extra_sys
+    )
+    starts = np.array([v.t_start for v in variants])
+    ends = np.array([v.t_end for v in variants])
+    sel_idx, total = selector(starts, ends, scores)
+    sel_set = set(int(i) for i in np.asarray(sel_idx))
+    selected = [variants[i] for i in sorted(sel_set, key=lambda i: variants[i].t_start)]
+    rejected = [v for i, v in enumerate(variants) if i not in sel_set]
+    return ClearingResult(
+        window=window,
+        selected=tuple(selected),
+        scores=tuple(float(scores[i]) for i in sorted(sel_set, key=lambda i: variants[i].t_start)),
+        total_score=float(total),
+        n_bids=len(variants),
+        rejected=tuple(rejected),
+    )
+
+
+def _fits(v: Variant, w: Window, eps: float = 1e-9) -> bool:
+    """Clearing-side sanity: variant must lie inside the announced window."""
+    return (
+        v.slice_id == w.slice_id
+        and v.t_start >= w.t_min - eps
+        and v.t_end <= w.t_end + eps
+        and v.duration > 0
+    )

@@ -1,0 +1,201 @@
+"""Job agents (paper §3.2–§3.3): autonomous variant generation and bidding.
+
+Each JobAgent owns a JobSpec + mutable progress state and implements the
+job side of the interaction cycle: given an announced window w*, it either
+returns a list of eligible, locally scored variants or stays silent.
+
+Eligibility (paper §4.1):
+  (a) probabilistic safety  Pr(max RAM > c_k | FMP) ≤ θ   (safe-by-construction)
+  (b) slice-specific constraints (affinity / min-capacity / compatibility)
+
+Local utility h̃(v) = Σ α φ(v) uses the job's OWN weighting of the paper's
+features (φ_JCT, φ_QoS, φ_progress).  A ``misreport`` factor lets experiments
+model strategic jobs (declaring inflated φs) — the §4.2.1 calibration layer
+is what keeps them in check, and tests verify exactly that.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional
+
+import numpy as np
+
+from .atomizer import AtomizerConfig, chunk_candidates
+from .scoring import JobFeatures
+from .trp import PhaseFMP, is_safe
+from .types import JobSpec, JobState, Variant, Window
+
+__all__ = ["JobAgent", "AgentConfig"]
+
+
+@dataclass(frozen=True)
+class AgentConfig:
+    theta: float = 0.05  # θ: capacity-violation risk bound
+    safety_method: str = "grid"  # grid | union (trp.py evaluators)
+    # how the job weights its own features inside h̃ (Σ ≤ 1)
+    alphas: Mapping[str, float] = field(
+        default_factory=lambda: {"jct": 0.5, "qos": 0.3, "progress": 0.2}
+    )
+    # strategic misreporting factor: declared φ = clip(truth * misreport)
+    misreport: float = 1.0
+    # start-time alternatives within the window (beyond t_min itself)
+    n_start_offsets: int = 1
+
+
+class JobAgent:
+    """The decision-capable agent wrapping one job."""
+
+    def __init__(
+        self,
+        spec: JobSpec,
+        cfg: AgentConfig = AgentConfig(),
+        atomizer: AtomizerConfig = AtomizerConfig(),
+    ):
+        self.spec = spec
+        self.cfg = cfg
+        self.atomizer = atomizer
+        self.state = JobState.WAITING
+        self.work_done: float = 0.0
+        self.n_bids = 0
+        self.n_wins = 0
+        self._variant_seq = 0
+        # outstanding commitments: work already won but not yet executed, and
+        # the time intervals it occupies (a job is a sequential subjob stream
+        # — it must never hold two overlapping intervals, even across slices)
+        self.outstanding_work: float = 0.0
+        self.committed_intervals: list = []
+
+    # -- progress ------------------------------------------------------------
+    @property
+    def work_remaining(self) -> float:
+        return max(0.0, self.spec.total_work - self.work_done)
+
+    @property
+    def biddable_work(self) -> float:
+        """Remaining work not yet covered by an outstanding commitment."""
+        return max(0.0, self.work_remaining - self.outstanding_work)
+
+    def mark_committed(self, variant: Variant) -> None:
+        self.outstanding_work += variant.payload["work"]
+        self.committed_intervals.append(variant.interval)
+
+    def mark_settled(self, variant: Variant) -> None:
+        """Commitment resolved (executed or failed): free the reservation."""
+        self.outstanding_work = max(0.0, self.outstanding_work - variant.payload["work"])
+        if variant.interval in self.committed_intervals:
+            self.committed_intervals.remove(variant.interval)
+
+    def _overlaps_own(self, t_start: float, duration: float) -> bool:
+        t_end = t_start + duration
+        for s, e in self.committed_intervals:
+            if t_start < e - 1e-12 and s < t_end - 1e-12:
+                return True
+        return False
+
+    @property
+    def finished(self) -> bool:
+        return self.work_remaining <= 1e-9
+
+    def record_progress(self, work: float) -> None:
+        self.work_done += work
+        if self.finished:
+            self.state = JobState.FINISHED
+
+    # -- throughput model ----------------------------------------------------
+    def throughput_on(self, capacity: float, n_chips: int = 1) -> float:
+        """Work units per second the job expects on a slice of this size.
+
+        Simple linear-scaling model with a memory floor: a slice below
+        ``min_capacity`` yields zero (condition (b): job stays silent).
+        """
+        if capacity < self.spec.min_capacity:
+            return 0.0
+        return float(n_chips)
+
+    # -- the job side of one JASDA iteration (steps 2–3) ----------------------
+    def generate_variants(self, window: Window, now: float, n_chips: int = 1) -> List[Variant]:
+        if self.finished or self.biddable_work <= 1e-9:
+            return []
+        thr = self.throughput_on(window.capacity, n_chips)
+        if thr <= 0:
+            return []  # condition (b) fails → silent
+        fmp: PhaseFMP = self.spec.fmp
+        # condition (a): probabilistic safety against this slice's capacity
+        if not is_safe(fmp, window.capacity, self.cfg.theta, method=self.cfg.safety_method):
+            return []
+
+        # Build a CHAIN of sequential chunks through the window (the paper's
+        # worked example: J_A fills w* with two tiling variants) plus smaller
+        # overlapping alternatives at each chain position.  Alternatives at
+        # one position mutually overlap, so the WIS clearing picks at most
+        # one per position; chain positions carve work from disjoint
+        # portions, so any selected combination commits ≤ biddable work.
+        variants: List[Variant] = []
+        remaining = self.biddable_work
+        t_cursor = window.t_min
+        max_v = self.atomizer.max_variants_per_window
+        while remaining > 1e-9 and t_cursor < window.t_end - 1e-9 and len(variants) < max_v:
+            span = window.t_end - t_cursor
+            plans = chunk_candidates(remaining, thr, span, self.atomizer)
+            if not plans:
+                break
+            for plan in plans:
+                if len(variants) >= max_v:
+                    break
+                if t_cursor + plan.duration > window.t_end + 1e-9:
+                    continue
+                if self._overlaps_own(t_cursor, plan.duration):
+                    continue  # job already committed elsewhere in this span
+                variants.append(self._make_variant(window, t_cursor, plan, now))
+            largest = plans[0]
+            remaining -= largest.work
+            t_cursor += largest.duration
+        if variants:
+            self.n_bids += 1
+        return variants
+
+    def _make_variant(self, window: Window, t_start: float, plan, now: float) -> Variant:
+        feats = self._features(plan.work, plan.duration, t_start, now)
+        declared = {
+            k: float(np.clip(v * self.cfg.misreport, 0.0, 1.0))
+            for k, v in feats.items()
+        }
+        h = sum(self.cfg.alphas.get(k, 0.0) * v for k, v in declared.items())
+        self._variant_seq += 1
+        return Variant(
+            job_id=self.spec.job_id,
+            slice_id=window.slice_id,
+            t_start=t_start,
+            duration=plan.duration,
+            fmp=self.spec.fmp,
+            local_utility=float(np.clip(h, 0.0, 1.0)),
+            declared_features=declared,
+            payload={
+                "work": plan.work,
+                "activation": self.atomizer.activation_cost,
+                "true_features": feats,  # ground truth (≠ declared if misreporting)
+            },
+            variant_id=f"{self.spec.job_id}/v{self._variant_seq}",
+        )
+
+    # -- truthful feature values (what an honest job declares) ----------------
+    def _features(self, work: float, duration: float, t_start: float, now: float) -> Dict[str, float]:
+        """Honest φ values, spread over [0,1] so they discriminate.
+
+        φ_JCT uses the chunk's *efficiency*: ideal compute time over committed
+        span including queueing delay (chunks starting soon and running dense
+        score high).  φ_QoS is the deadline-feasibility indicator.  φ_progress
+        is the fraction of remaining work the chunk covers.
+        """
+        finish = t_start + duration
+        wait = max(0.0, t_start - now)
+        phi_jct = float(np.clip(duration / max(duration + wait, 1e-9), 0.0, 1.0))
+        if self.spec.qos_deadline is None:
+            phi_qos = 1.0
+        else:
+            rem_after = self.work_remaining - work
+            est_completion = finish + rem_after  # thr≈1 chip ⇒ seconds ≈ work
+            phi_qos = JobFeatures.qos(est_completion <= self.spec.qos_deadline)
+        phi_prog = JobFeatures.progress(work, self.work_remaining)
+        return {"jct": phi_jct, "qos": phi_qos, "progress": phi_prog}

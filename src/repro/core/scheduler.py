@@ -1,0 +1,210 @@
+"""The JASDA scheduler (paper §3: the five-step interaction cycle).
+
+``JasdaScheduler`` owns the control plane:
+
+  * slice timelines + window announcement        (windows.py, step 1)
+  * bid collection from registered JobAgents     (jobs.py, steps 2–3)
+  * calibrated scoring + optimal WIS clearing    (clearing.py, step 4)
+  * commitment + bookkeeping + fairness/trust    (step 5)
+
+It is execution-agnostic: the simulator (simulator.py) and the real TPU
+executor (executor.py) both drive it through ``step()`` and feed back
+observations through ``complete()``.  That separation mirrors the paper's
+architecture, where the scheduler reasons only over declared profiles and
+ex-post measurements.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .calibration import CalibrationConfig, Calibrator
+from .clearing import clear_window
+from .fairness import AgePolicy, AgeTracker
+from .jobs import JobAgent
+from .scoring import ScoringPolicy
+from .types import ClearingResult, Commitment, JobSpec, SliceSpec, Variant, Window
+from .windows import SliceTimeline, WindowPolicy, announce_window
+
+__all__ = ["JasdaScheduler", "SchedulerConfig"]
+
+
+@dataclass(frozen=True)
+class SchedulerConfig:
+    scoring: ScoringPolicy = ScoringPolicy()
+    window: WindowPolicy = WindowPolicy()
+    calibration: CalibrationConfig = CalibrationConfig()
+    age: AgePolicy = AgePolicy()
+    # windows announced but receiving no winning bids are excluded for this
+    # much TIME (prevents re-announcing a dead gap forever)
+    dead_window_cooldown: float = 8.0
+
+
+@dataclass
+class IterationLog:
+    """One row of the scheduler's audit trail (transparency, paper §5(f))."""
+
+    t: float
+    window: Optional[Window]
+    n_bidders: int
+    n_bids: int
+    n_selected: int
+    total_score: float
+
+
+class JasdaScheduler:
+    def __init__(self, slices: Sequence[SliceSpec], config: SchedulerConfig = SchedulerConfig()):
+        self.config = config
+        self.slices: Dict[str, SliceTimeline] = {
+            s.slice_id: SliceTimeline(s) for s in slices
+        }
+        self.agents: Dict[str, JobAgent] = {}
+        self.calibrator = Calibrator(config.calibration)
+        self.ages = AgeTracker(config.age)
+        self.commitments: List[Commitment] = []
+        self.log: List[IterationLog] = []
+        self.retired_intervals: Dict[str, List[Tuple[float, float]]] = {}
+        self._dead_windows: Dict[Tuple[str, float], float] = {}  # key -> expiry time
+
+    # -- membership -----------------------------------------------------------
+    def add_job(self, agent: JobAgent, now: float) -> None:
+        self.agents[agent.spec.job_id] = agent
+        self.ages.register_arrival(agent.spec.job_id, now)
+
+    def remove_job(self, job_id: str) -> None:
+        self.agents.pop(job_id, None)
+        self.ages.remove(job_id)
+
+    def add_slice(self, spec: SliceSpec) -> None:
+        """Elastic scale-up: a new slice joins the pool mid-run."""
+        self.slices[spec.slice_id] = SliceTimeline(spec)
+
+    def drop_slice(self, slice_id: str, now: Optional[float] = None) -> List[Commitment]:
+        """Slice failure/scale-down: returns the commitments that were lost."""
+        tl = self.slices.pop(slice_id, None)
+        if tl is not None:  # keep history for utilization accounting, but
+            # only the part actually EXECUTED (future commitments are lost,
+            # re-bid elsewhere — counting them would double-book busy time)
+            ivs = tl.busy()
+            if now is not None:
+                ivs = [(s0, min(e0, now)) for s0, e0 in ivs if s0 < now]
+            self.retired_intervals.setdefault(slice_id, []).extend(ivs)
+        lost = [c for c in self.commitments if c.variant.slice_id == slice_id]
+        self.commitments = [c for c in self.commitments if c.variant.slice_id != slice_id]
+        for c in lost:
+            agent = self.agents.get(c.variant.job_id)
+            if agent is not None:
+                agent.mark_settled(c.variant)  # work becomes biddable again
+        return lost
+
+    # -- the interaction cycle --------------------------------------------------
+    def step(self, now: float) -> Optional[ClearingResult]:
+        """Run ONE JASDA iteration (Algorithm 1). Returns None if no window."""
+        self._dead_windows = {k: e for k, e in self._dead_windows.items() if e > now}
+        window = announce_window(
+            self.slices, now, self.config.window, exclude=set(self._dead_windows)
+        )
+        if window is None:
+            self.log.append(IterationLog(now, None, 0, 0, 0, 0.0))
+            return None
+
+        # Steps 2–3: jobs respond (or stay silent).
+        pool: List[Variant] = []
+        bidders = 0
+        n_chips = self.slices[window.slice_id].spec.n_chips
+        for agent in self.agents.values():
+            vs = agent.generate_variants(window, now, n_chips)
+            if vs:
+                bidders += 1
+                pool.extend(vs)
+
+        # Step 4: calibrated scoring + optimal clearing.
+        result = clear_window(
+            window,
+            pool,
+            self.config.scoring,
+            ages=self.ages.ages(now),
+            calibrate=self.calibrator.calibrate,
+        )
+
+        # Step 5: commit and advance.
+        if result.selected:
+            tl = self.slices[window.slice_id]
+            for v, s in zip(result.selected, result.scores):
+                tl.commit(v.t_start, v.t_end)
+                self.commitments.append(Commitment(variant=v, commit_time=now, score=s))
+                self.ages.mark_selected(v.job_id, now)
+                agent = self.agents[v.job_id]
+                agent.n_wins += 1
+                agent.mark_committed(v)
+        else:
+            key = (window.slice_id, round(window.t_min, 9))
+            self._dead_windows[key] = now + self.config.dead_window_cooldown
+
+        self.log.append(
+            IterationLog(now, window, bidders, result.n_bids, len(result.selected), result.total_score)
+        )
+        return result
+
+    # -- ex-post feedback (paper §4.2.1) -----------------------------------------
+    def complete(
+        self,
+        variant: Variant,
+        observed_features: Dict[str, float],
+        *,
+        observed_utility: Optional[float] = None,
+        work_done: Optional[float] = None,
+        actual_end: Optional[float] = None,
+    ) -> float:
+        """Ingest execution ground truth for a committed variant.
+
+        Updates calibration state (ρ_J, HistAvg) and job progress; if the
+        subjob finished EARLY, the reclaimed tail of its committed interval
+        is released back to the timeline (new window for future iterations).
+        """
+        eps = self.calibrator.verify(variant, observed_features, observed_utility)
+        agent = self.agents.get(variant.job_id)
+        if agent is not None:
+            agent.mark_settled(variant)
+            agent.record_progress(
+                work_done if work_done is not None else variant.payload["work"]
+            )
+        if actual_end is not None and actual_end < variant.t_end - 1e-9:
+            tl = self.slices.get(variant.slice_id)
+            if tl is not None:
+                tl.release(variant.t_start, variant.t_end)
+                tl.commit(variant.t_start, actual_end)
+        return eps
+
+    def fail(self, variant: Variant, now: float) -> None:
+        """A committed subjob died (node failure): release its reservation.
+
+        The job's progress for the chunk is NOT recorded (it restarts from
+        the last checkpoint boundary = chunk start), and the slice becomes
+        free from ``now`` — exactly the recovery path atomization buys.
+        """
+        tl = self.slices.get(variant.slice_id)
+        if tl is not None:
+            tl.release(variant.t_start, variant.t_end)
+            occupied_until = min(now, variant.t_end)
+            if occupied_until > variant.t_start:
+                tl.commit(variant.t_start, occupied_until)  # occupancy until death
+        agent = self.agents.get(variant.job_id)
+        if agent is not None:
+            agent.mark_settled(variant)
+
+    # -- reporting ------------------------------------------------------------
+    def utilization(self, t_from: float, t_to: float) -> Dict[str, float]:
+        out = {}
+        span = max(t_to - t_from, 1e-9)
+        intervals: Dict[str, list] = {
+            sid: list(tl.busy()) for sid, tl in self.slices.items()
+        }
+        for sid, ivs in self.retired_intervals.items():
+            intervals.setdefault(sid, []).extend(ivs)
+        for sid, ivs in intervals.items():
+            busy = sum(max(0.0, min(e, t_to) - max(s, t_from)) for s, e in ivs)
+            out[sid] = busy / span
+        return out

@@ -1,0 +1,245 @@
+"""Scoring model (paper §4.2, Eqs. 1–4).
+
+Each variant gets a normalized composite score
+
+    Score(v) = λ · h̃(v) + (1 − λ) · f̃_sys(v),          λ ∈ [0, 1]   (Eq. 4)
+
+with feature decompositions
+
+    h̃(v)     = Σ_i α_i φ_i(v),   Σ_i α_i ≤ 1,  φ_i ∈ [0, 1]          (Eq. 2)
+    f̃_sys(v) = Σ_j β_j ψ_j(v),   Σ_j β_j ≤ 1,  ψ_j ∈ [0, 1]          (Eq. 3)
+
+so Score(v) ∈ [0, 1] by construction.  The paper's representative features
+(φ_JCT, φ_QoS, ψ_energy, ψ_mem_headroom) are implemented below, plus the
+system-side utilization/slack features its text describes and the age term of
+§4.3 (β_age · A_i(t) folded into f̃_sys).
+
+The scheduler-side evaluation is vectorized over the variant pool; the same
+math is mirrored on-device by ``kernels/jasda_score``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Mapping, Optional, Sequence
+
+import numpy as np
+
+from .types import Variant, Window
+
+__all__ = [
+    "ScoringPolicy",
+    "JobFeatures",
+    "SystemFeatures",
+    "composite_score",
+    "score_pool",
+    "job_utility",
+    "system_utility",
+    "POLICY_QOS_FIRST",
+    "POLICY_BALANCED",
+    "POLICY_UTILIZATION_FIRST",
+]
+
+
+# ---------------------------------------------------------------------------
+# Policy (λ, α, β weights) — Table 2 presets
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ScoringPolicy:
+    """Policy weights governing the job/system trade-off (paper Table 2).
+
+    ``alphas`` weight job-side features φ_i, ``betas`` weight system-side
+    features ψ_j.  Weights must be non-negative with Σα ≤ 1, Σβ ≤ 1 so the
+    composite score stays in [0, 1].
+    """
+
+    lam: float = 0.5  # λ
+    alphas: Mapping[str, float] = field(
+        default_factory=lambda: {"jct": 0.5, "qos": 0.3, "progress": 0.2}
+    )
+    betas: Mapping[str, float] = field(
+        default_factory=lambda: {
+            "utilization": 0.4,
+            "slack": 0.2,
+            "mem_headroom": 0.1,
+            "energy": 0.1,
+            "age": 0.2,
+        }
+    )
+
+    def __post_init__(self):
+        if not (0.0 <= self.lam <= 1.0):
+            raise ValueError(f"lambda must be in [0,1], got {self.lam}")
+        for name, w in list(self.alphas.items()) + list(self.betas.items()):
+            if w < 0:
+                raise ValueError(f"negative weight {name}={w}")
+        if sum(self.alphas.values()) > 1.0 + 1e-9:
+            raise ValueError("sum(alpha) must be <= 1")
+        if sum(self.betas.values()) > 1.0 + 1e-9:
+            raise ValueError("sum(beta) must be <= 1")
+
+    @property
+    def beta_age(self) -> float:
+        return self.betas.get("age", 0.0)
+
+    def replace(self, **kw) -> "ScoringPolicy":
+        return dataclasses.replace(self, **kw)
+
+
+# Table 2 presets.
+POLICY_QOS_FIRST = ScoringPolicy(lam=0.7)
+POLICY_BALANCED = ScoringPolicy(lam=0.5)
+POLICY_UTILIZATION_FIRST = ScoringPolicy(lam=0.3)
+
+
+# ---------------------------------------------------------------------------
+# Job-side features φ_i(v) ∈ [0,1]  (declared by the job)
+# ---------------------------------------------------------------------------
+
+
+class JobFeatures:
+    """Reference implementations of the paper's job-side features.
+
+    Jobs *declare* these (they may misreport — that is what §4.2.1 verifies);
+    the functions here are what an honest job computes.
+    """
+
+    @staticmethod
+    def jct(delta_jct: float, delta_jct_max: float) -> float:
+        """φ_JCT = 1 − ΔJCT/ΔJCT_max : earlier expected completion → higher."""
+        if delta_jct_max <= 0:
+            return 1.0
+        return float(np.clip(1.0 - delta_jct / delta_jct_max, 0.0, 1.0))
+
+    @staticmethod
+    def qos(meets_qos: bool) -> float:
+        """φ_QoS = 1[meets QoS]."""
+        return 1.0 if meets_qos else 0.0
+
+    @staticmethod
+    def progress(work_in_variant: float, work_remaining: float) -> float:
+        """Fraction of the job's remaining work covered by this variant."""
+        if work_remaining <= 0:
+            return 1.0
+        return float(np.clip(work_in_variant / work_remaining, 0.0, 1.0))
+
+
+# ---------------------------------------------------------------------------
+# System-side features ψ_j(v) ∈ [0,1]  (computed by the scheduler)
+# ---------------------------------------------------------------------------
+
+
+class SystemFeatures:
+    @staticmethod
+    def utilization(variant: Variant, window: Window) -> float:
+        """ψ_util: fraction of the announced window the variant occupies."""
+        if window.duration <= 0:
+            return 0.0
+        return float(np.clip(variant.duration / window.duration, 0.0, 1.0))
+
+    @staticmethod
+    def slack(variant: Variant, window: Window) -> float:
+        """ψ_slack: 1 − normalized dead time the variant leaves *before* it.
+
+        Variants that start right at the window start leave no leading gap
+        (which could otherwise be unfillable), hence score 1.
+        """
+        if window.duration <= 0:
+            return 1.0
+        lead = (variant.t_start - window.t_min) / window.duration
+        return float(np.clip(1.0 - lead, 0.0, 1.0))
+
+    @staticmethod
+    def mem_headroom(variant: Variant, window: Window, *, grid: int = 32) -> float:
+        """ψ_mem_headroom = E[(c_k − RAM_i(t)) / c_k] over I(v)  (paper §4.2)."""
+        if window.capacity <= 0:
+            return 0.0
+        mu, _ = variant.fmp.grid(grid)
+        headroom = (window.capacity - mu) / window.capacity
+        return float(np.clip(np.mean(headroom), 0.0, 1.0))
+
+    @staticmethod
+    def energy(energy_joules: float, energy_max: float) -> float:
+        """ψ_energy = 1 − E(v)/E_max."""
+        if energy_max <= 0:
+            return 1.0
+        return float(np.clip(1.0 - energy_joules / energy_max, 0.0, 1.0))
+
+
+# ---------------------------------------------------------------------------
+# Composite scoring (Eq. 4) — scalar and pooled/vectorized forms
+# ---------------------------------------------------------------------------
+
+
+def job_utility(features: Mapping[str, float], policy: ScoringPolicy) -> float:
+    """h̃(v) = Σ α_i φ_i(v) over the features the variant declares."""
+    total = 0.0
+    for name, alpha in policy.alphas.items():
+        phi = float(features.get(name, 0.0))
+        if not (-1e-9 <= phi <= 1.0 + 1e-9):
+            raise ValueError(f"feature {name}={phi} outside [0,1]")
+        total += alpha * np.clip(phi, 0.0, 1.0)
+    return float(total)
+
+
+def system_utility(
+    variant: Variant,
+    window: Window,
+    policy: ScoringPolicy,
+    *,
+    age: float = 0.0,
+    extra: Optional[Mapping[str, float]] = None,
+) -> float:
+    """f̃_sys(v) = Σ β_j ψ_j(v) + β_age · A_i(t)   (paper §4.2 + §4.3)."""
+    psis: Dict[str, float] = {
+        "utilization": SystemFeatures.utilization(variant, window),
+        "slack": SystemFeatures.slack(variant, window),
+        "mem_headroom": SystemFeatures.mem_headroom(variant, window),
+        "age": float(np.clip(age, 0.0, 1.0)),
+    }
+    if extra:
+        psis.update({k: float(np.clip(v, 0.0, 1.0)) for k, v in extra.items()})
+    total = 0.0
+    for name, beta in policy.betas.items():
+        total += beta * psis.get(name, 0.0)
+    return float(total)
+
+
+def composite_score(h_tilde: float, f_sys: float, lam: float) -> float:
+    """Eq. 4: Score(v) = λ h̃ + (1−λ) f̃_sys, guaranteed ∈ [0,1]."""
+    s = lam * h_tilde + (1.0 - lam) * f_sys
+    return float(np.clip(s, 0.0, 1.0))
+
+
+def score_pool(
+    variants: Sequence[Variant],
+    window: Window,
+    policy: ScoringPolicy,
+    *,
+    ages: Optional[Mapping[str, float]] = None,
+    calibrate: Optional[Callable[[Variant, float], float]] = None,
+    extra_sys: Optional[Callable[[Variant], Mapping[str, float]]] = None,
+) -> np.ndarray:
+    """Score every variant in the pool (Algorithm 1, lines 6–8).
+
+    ``calibrate`` is the §4.2.1 hook: it maps the *declared* h̃(v) to the
+    calibrated ĥ(v) (e.g. via ``calibration.Calibrator.calibrate``).
+    ``ages`` maps job_id → A_i(t) ∈ [0,1].
+    """
+    ages = ages or {}
+    out = np.zeros(len(variants), dtype=np.float64)
+    for idx, v in enumerate(variants):
+        h = v.local_utility
+        if calibrate is not None:
+            h = calibrate(v, h)
+        f = system_utility(
+            v,
+            window,
+            policy,
+            age=ages.get(v.job_id, 0.0),
+            extra=extra_sys(v) if extra_sys else None,
+        )
+        out[idx] = composite_score(h, f, policy.lam)
+    return out

@@ -1,0 +1,302 @@
+"""Discrete-event cluster simulator for JASDA and baseline schedulers.
+
+The paper defers its quantitative study; this simulator IS that study's
+engine.  It drives the scheduler's interaction cycle against a synthetic
+cluster in which committed subjobs execute with *stochastic* runtimes and
+memory trajectories drawn from the jobs' TRUE profiles (which may differ
+from the declared ones — that is how misreporting and the §4.2.1
+verification loop are exercised).
+
+Fault model (beyond-paper, per assignment):
+  * slice failures  — a slice dies at a random time, killing its running
+    subjob; the job loses only that chunk (atomization = cheap recovery);
+    the slice optionally resurrects after ``repair_time`` (elasticity).
+  * stragglers      — a slice runs at speed < 1; observed durations inflate,
+    ex-post ε grows, and calibration de-prioritizes jobs mapped there —
+    mitigation falls out of the paper's own trust machinery.
+
+Metrics: utilization, mean/95p JCT, makespan, Jain fairness on slowdown,
+bid/win counts, capacity-violation rate (validates θ).
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .fairness import jain_index
+from .jobs import JobAgent
+from .scheduler import JasdaScheduler, SchedulerConfig
+from .types import JobSpec, SliceSpec, Variant
+
+__all__ = ["SimConfig", "SimResult", "simulate", "make_workload"]
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    t_end: float = 2000.0
+    iteration_dt: float = 1.0  # scheduler wakes up every dt (A3)
+    seed: int = 0
+    # execution noise: actual duration = predicted_median * LogNormal(cv)
+    runtime_cv: float = 0.1
+    # failure injection
+    failure_rate: float = 0.0  # per-slice failures per unit time
+    repair_time: float = 50.0
+    # capacity enforcement: sample the true memory trajectory and count
+    # violations (validates the θ safety bound end-to-end)
+    check_capacity: bool = True
+
+
+@dataclass
+class SimResult:
+    utilization: float
+    per_slice_utilization: Dict[str, float]
+    mean_jct: float
+    p95_jct: float
+    makespan: float
+    jain_slowdown: float
+    n_finished: int
+    n_jobs: int
+    capacity_violations: int
+    n_committed: int
+    total_score: float
+    jct_per_job: Dict[str, float] = field(default_factory=dict)
+    reliability: Dict[str, float] = field(default_factory=dict)
+    iterations: int = 0
+
+    def summary(self) -> str:
+        return (
+            f"util={self.utilization:.3f} meanJCT={self.mean_jct:.1f} "
+            f"p95JCT={self.p95_jct:.1f} makespan={self.makespan:.1f} "
+            f"jain={self.jain_slowdown:.3f} finished={self.n_finished}/{self.n_jobs} "
+            f"violations={self.capacity_violations}"
+        )
+
+
+# Event kinds, ordered: completions before scheduler ticks at equal time.
+_COMPLETE, _FAIL, _REPAIR, _ARRIVE, _TICK = 0, 1, 2, 3, 4
+
+
+def simulate(
+    scheduler: JasdaScheduler,
+    agents: Sequence[JobAgent],
+    cfg: SimConfig = SimConfig(),
+) -> SimResult:
+    rng = np.random.default_rng(cfg.seed)
+    events: List[Tuple[float, int, int, object]] = []
+    seq = 0
+
+    def push(t, kind, payload=None):
+        nonlocal seq
+        heapq.heappush(events, (t, kind, seq, payload))
+        seq += 1
+
+    for a in agents:
+        push(a.spec.arrival_time, _ARRIVE, a)
+    push(0.0, _TICK)
+
+    # failure schedule (Poisson per slice)
+    if cfg.failure_rate > 0:
+        for sid in list(scheduler.slices):
+            t = rng.exponential(1.0 / cfg.failure_rate)
+            while t < cfg.t_end:
+                push(t, _FAIL, sid)
+                t += cfg.repair_time + rng.exponential(1.0 / cfg.failure_rate)
+
+    running: Dict[str, Tuple[Variant, float]] = {}  # slice -> (variant, actual_end)
+    dead_slices: Dict[str, SliceSpec] = {}
+    jct: Dict[str, float] = {}
+    arrival: Dict[str, float] = {}
+    violations = 0
+    iterations = 0
+    now = 0.0
+
+    def launch(v: Variant, t_now: float) -> None:
+        """Start executing a committed variant whose t_start has arrived.
+
+        Ground-truth runtime = activation + work / (throughput × speed) with
+        log-normal noise — NOT the declared Δt̃ (which is a conservative
+        quantile).  Early finishes release the committed tail back to the
+        timeline (scheduler.complete), so honest-but-safe declarations cost
+        little; overruns lose the tail work beyond the committed end.
+        """
+        nonlocal violations
+        spec = scheduler.slices[v.slice_id].spec
+        agent = scheduler.agents.get(v.job_id)
+        thr = agent.throughput_on(spec.capacity_bytes, spec.n_chips) if agent else 1.0
+        thr = max(thr * spec.speed, 1e-9)
+        activation = float(v.payload.get("activation", 0.0))
+        median = activation + v.payload["work"] / thr
+        sigma = np.sqrt(np.log1p(cfg.runtime_cv**2))
+        actual = float(median * np.exp(rng.normal(-0.5 * sigma**2, sigma)))
+        # truncate to the committed interval: non-preemptive, but the slice is
+        # reclaimed at the committed end regardless (overrun → lost tail work)
+        actual_end = v.t_start + actual
+        if cfg.check_capacity:
+            traj = v.fmp.sample_trajectory(rng)
+            if np.any(traj > scheduler.slices[v.slice_id].spec.capacity_bytes):
+                violations += 1
+        running[v.slice_id] = (v, actual_end)
+        push(max(actual_end, t_now), _COMPLETE, v.slice_id)
+
+    pending: List[Variant] = []  # committed, waiting for t_start
+
+    while events:
+        t, kind, _, payload = heapq.heappop(events)
+        if t > cfg.t_end:
+            break
+        now = t
+
+        if kind == _ARRIVE:
+            agent: JobAgent = payload
+            scheduler.add_job(agent, now)
+            arrival[agent.spec.job_id] = now
+
+        elif kind == _TICK:
+            # "This cycle repeats continuously" (paper §3): run iterations
+            # back-to-back until no further window clears, bounded per tick.
+            budget = 3 * max(len(scheduler.slices), 1)
+            while budget > 0:
+                budget -= 1
+                iterations += 1
+                result = scheduler.step(now)
+                if result is None:
+                    break  # no more announceable windows this tick
+                if result.selected:
+                    pending.extend(result.selected)
+            # launch any committed variants whose start has arrived
+            still = []
+            for v in pending:
+                if v.slice_id in dead_slices:
+                    continue  # lost with the slice
+                if v.t_start <= now + cfg.iteration_dt and v.slice_id not in running:
+                    launch(v, now)
+                else:
+                    still.append(v)
+            pending = still
+            if now + cfg.iteration_dt <= cfg.t_end:
+                push(now + cfg.iteration_dt, _TICK)
+
+        elif kind == _COMPLETE:
+            sid = payload
+            if sid not in running:
+                continue
+            v, actual_end = running.pop(sid)
+            dur_actual = actual_end - v.t_start
+            # Observed feature values for ex-post verification come from the
+            # job's TRUE profile adjusted by realized runtime — independent of
+            # what was declared, so misreporting is measurable (Eq. 6).
+            truth = dict(v.payload.get("true_features", v.declared_features))
+            observed = dict(truth)
+            ratio = float(np.clip(v.duration / max(dur_actual, 1e-9), 0.0, 1.0))
+            for k in ("jct", "progress"):
+                if k in observed:
+                    observed[k] = float(np.clip(observed[k] * ratio, 0.0, 1.0))
+            overrun = actual_end > v.t_end + 1e-9
+            work = v.payload["work"] * (min(1.0, (v.t_end - v.t_start) / max(dur_actual, 1e-9)) if overrun else 1.0)
+            scheduler.complete(
+                v,
+                observed,
+                work_done=work,
+                actual_end=min(actual_end, v.t_end),
+            )
+            agent = scheduler.agents.get(v.job_id)
+            if agent is not None and agent.finished and v.job_id not in jct:
+                jct[v.job_id] = now - arrival[v.job_id]
+
+        elif kind == _FAIL:
+            sid = payload
+            if sid not in scheduler.slices:
+                continue
+            spec = scheduler.slices[sid].spec
+            if sid in running:
+                v, _ = running.pop(sid)
+                scheduler.fail(v, now)
+            lost = scheduler.drop_slice(sid, now=now)
+            pending = [p for p in pending if p.slice_id != sid]
+            dead_slices[sid] = spec
+            push(now + cfg.repair_time, _REPAIR, sid)
+
+        elif kind == _REPAIR:
+            sid = payload
+            spec = dead_slices.pop(sid, None)
+            if spec is not None:
+                scheduler.add_slice(spec)
+
+    # ---- metrics ------------------------------------------------------------
+    # utilization over the ACTIVE span [first arrival, last completion]: long
+    # idle tails after the workload drains would otherwise dilute the metric
+    t_first = min(arrival.values()) if arrival else 0.0
+    t_last = max(jct[j] + arrival[j] for j in jct) if jct else min(now, cfg.t_end)
+    horizon = max(t_last - t_first, 1e-9)
+    per_slice = scheduler.utilization(t_first, t_last)
+    slowdowns = []
+    for jid, a in scheduler.agents.items():
+        if jid in jct:
+            ideal = a.spec.total_work  # thr=1 ⇒ seconds
+            slowdowns.append(jct[jid] / max(ideal, 1e-9))
+    jcts = np.array(list(jct.values())) if jct else np.array([np.nan])
+    calibrator = getattr(scheduler, "calibrator", None)
+    cal = calibrator.snapshot() if calibrator is not None else {}
+    return SimResult(
+        utilization=float(np.mean(list(per_slice.values()))) if per_slice else 0.0,
+        per_slice_utilization=per_slice,
+        mean_jct=float(np.nanmean(jcts)),
+        p95_jct=float(np.nanpercentile(jcts, 95)),
+        makespan=float(max(jct.values())) if jct else float("nan"),
+        jain_slowdown=jain_index(slowdowns) if slowdowns else 1.0,
+        n_finished=len(jct),
+        n_jobs=len(agents),
+        capacity_violations=violations,
+        n_committed=len(scheduler.commitments),
+        total_score=float(sum(c.score for c in scheduler.commitments)),
+        jct_per_job=jct,
+        reliability={j: s["rho"] for j, s in cal.items()},
+        iterations=iterations,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Synthetic workloads
+# ---------------------------------------------------------------------------
+
+
+def make_workload(
+    n_jobs: int,
+    *,
+    seed: int = 0,
+    arrival_rate: float = 0.2,
+    work_range: Tuple[float, float] = (20.0, 200.0),
+    mem_range_gb: Tuple[float, float] = (2.0, 14.0),
+    qos_fraction: float = 0.3,
+    misreport_fraction: float = 0.0,
+    misreport_factor: float = 1.5,
+) -> List[JobAgent]:
+    """Poisson arrivals, log-uniform work, warmup/steady/burst FMPs."""
+    from .jobs import AgentConfig
+    from .trp import fmp_standard
+
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    agents = []
+    gb = 1 << 30
+    for i in range(n_jobs):
+        t += rng.exponential(1.0 / arrival_rate)
+        work = float(np.exp(rng.uniform(np.log(work_range[0]), np.log(work_range[1]))))
+        steady = rng.uniform(*mem_range_gb) * gb
+        fmp = fmp_standard(0.3 * steady, steady, 0.1 * steady, rel_sigma=0.03)
+        deadline = None
+        if rng.uniform() < qos_fraction:
+            deadline = t + work * rng.uniform(2.0, 6.0)
+        spec = JobSpec(
+            job_id=f"J{i:03d}",
+            arrival_time=t,
+            total_work=work,
+            fmp=fmp,
+            qos_deadline=deadline,
+        )
+        mis = misreport_factor if rng.uniform() < misreport_fraction else 1.0
+        agents.append(JobAgent(spec, AgentConfig(misreport=mis)))
+    return agents

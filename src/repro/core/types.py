@@ -1,0 +1,197 @@
+"""Core JASDA datatypes (paper §3.1–§3.3).
+
+These are plain frozen dataclasses: the scheduler control plane is host-side
+Python (as in the paper), while the numeric hot paths (scoring, safety, WIS)
+have vectorized JAX / Pallas implementations operating on struct-of-array
+views produced by :func:`variants_to_arrays`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from dataclasses import dataclass, field
+from typing import Any, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Slices (the MIG analogue: a TPU mesh partition)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SliceSpec:
+    """A schedulable resource slice ``s_k`` with fixed capacity ``c_k`` (A1).
+
+    On the paper's hardware this is a MIG slice of one GPU; in our TPU
+    adaptation it is a partition of a pod mesh (``n_chips`` chips, aggregate
+    HBM ``capacity_bytes``).
+    """
+
+    slice_id: str
+    capacity_bytes: float  # c_k
+    n_chips: int = 1
+    flops_per_s: float = 197e12  # bf16 peak per chip (v5e-class)
+    hbm_bw: float = 819e9  # bytes/s per chip
+    # relative execution speed multiplier (stragglers are < 1.0)
+    speed: float = 1.0
+
+    @property
+    def total_flops(self) -> float:
+        return self.n_chips * self.flops_per_s * self.speed
+
+
+# ---------------------------------------------------------------------------
+# Windows (paper §3.1): w* = (s_k, c_k, t_min, Δt)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Window:
+    """An announced time–capacity window on a slice."""
+
+    slice_id: str
+    capacity: float  # c_k  (bytes)
+    t_min: float  # earliest start
+    duration: float  # Δt
+
+    @property
+    def t_end(self) -> float:
+        return self.t_min + self.duration
+
+    def contains(self, t_start: float, dur: float, *, eps: float = 1e-9) -> bool:
+        return (t_start >= self.t_min - eps) and (t_start + dur <= self.t_end + eps)
+
+
+# ---------------------------------------------------------------------------
+# Variants (paper §3.2): v_{i,k,w*} = (s_k, t_start, Δt̃_i, TRP_i)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Variant:
+    """A candidate subjob proposed by a job for a specific window.
+
+    ``declared_features`` holds the job's self-declared normalized feature
+    values φ_i(v) ∈ [0,1] (paper Eq. 2 / §4.2.1) — these are what ex-post
+    verification compares against observations.  ``local_utility`` is the
+    aggregate h̃(v) = Σ αᵢ φᵢ(v).
+    """
+
+    job_id: str
+    slice_id: str
+    t_start: float
+    duration: float  # Δt̃_i (predicted)
+    fmp: "FMPLike"  # compact TRP descriptor (memory profile)
+    local_utility: float  # h̃(v) ∈ [0,1], declared by the job
+    declared_features: Mapping[str, float] = field(default_factory=dict)
+    payload: Any = None  # opaque subjob spec (e.g. a step-range chunk)
+    variant_id: str = ""
+
+    @property
+    def t_end(self) -> float:
+        return self.t_start + self.duration
+
+    @property
+    def interval(self) -> Tuple[float, float]:
+        """I(v) = [t_start, t_start + Δt̃]."""
+        return (self.t_start, self.t_end)
+
+
+# Anything exposing the FMP protocol (mean/std over a time grid).
+class FMPLike:  # pragma: no cover - typing helper
+    def mean_std(self, t: np.ndarray) -> Tuple[np.ndarray, np.ndarray]: ...
+
+
+# ---------------------------------------------------------------------------
+# Jobs
+# ---------------------------------------------------------------------------
+
+
+class JobState(enum.Enum):
+    WAITING = "waiting"
+    RUNNING = "running"
+    FINISHED = "finished"
+    FAILED = "failed"
+
+
+@dataclass
+class JobSpec:
+    """Static description of a job entering the system."""
+
+    job_id: str
+    arrival_time: float
+    total_work: float  # abstract work units (e.g. total step·chip-seconds)
+    fmp: Any  # the job's (true or declared) memory profile model
+    qos_deadline: Optional[float] = None  # QoS target completion time
+    min_capacity: float = 0.0  # smallest slice capacity the job can use
+    priority: float = 1.0
+    # energy model: joules per unit work (used by the ψ_energy feature)
+    energy_per_work: float = 1.0
+    metadata: Mapping[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class JobStats:
+    """Mutable per-job accounting used by fairness + calibration."""
+
+    work_done: float = 0.0
+    last_scheduled_time: Optional[float] = None
+    first_scheduled_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    n_bids: int = 0
+    n_wins: int = 0
+    # calibration state (paper §4.2.1)
+    hist_avg: float = 0.5  # HistAvg(J): EWMA of verified scores
+    reliability: float = 1.0  # ρ_J ∈ (0, 1]
+    verified_errors: list = field(default_factory=list)  # ε(v) history
+
+
+# ---------------------------------------------------------------------------
+# Commitments / schedule bookkeeping
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Commitment:
+    """A variant committed to the schedule (paper step 5)."""
+
+    variant: Variant
+    commit_time: float
+    score: float
+
+
+@dataclass
+class ClearingResult:
+    """Output of one clearing iteration (Algorithm 1)."""
+
+    window: Window
+    selected: Sequence[Variant]
+    scores: Sequence[float]
+    total_score: float
+    n_bids: int
+    rejected: Sequence[Variant] = ()
+
+
+# ---------------------------------------------------------------------------
+# Struct-of-arrays view for vectorized scoring / WIS (JAX + Pallas paths)
+# ---------------------------------------------------------------------------
+
+
+def variants_to_arrays(variants: Sequence[Variant]) -> dict:
+    """Convert a variant pool to a struct-of-arrays dict for device kernels."""
+    n = len(variants)
+    return {
+        "t_start": np.asarray([v.t_start for v in variants], dtype=np.float64),
+        "t_end": np.asarray([v.t_end for v in variants], dtype=np.float64),
+        "duration": np.asarray([v.duration for v in variants], dtype=np.float64),
+        "local_utility": np.asarray(
+            [v.local_utility for v in variants], dtype=np.float64
+        ),
+        "index": np.arange(n),
+    }
+
+
+def overlaps(a: Variant, b: Variant, *, eps: float = 1e-12) -> bool:
+    """Temporal overlap predicate on the same slice (clearing constraint i)."""
+    return a.t_start < b.t_end - eps and b.t_start < a.t_end - eps

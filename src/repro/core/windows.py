@@ -1,0 +1,157 @@
+"""Window derivation and announcement policies (paper §3.1, §5.1(c)).
+
+The scheduler maintains a per-slice time–capacity map (committed execution
+intervals) and derives contiguous idle gaps.  Each JASDA iteration announces
+ONE window w* = (s_k, c_k, t_min, Δt) chosen by a pluggable policy:
+
+* ``earliest``   — earliest start time (the paper prototype's default,
+                   "minimizing latency between announcement and generation").
+* ``largest``    — largest gap first (fragmentation-averse).
+* ``best_fit``   — smallest gap that still admits τ_min work (packs tight
+                   gaps before they expire).
+* ``slack``      — gap whose slice has the most idle fraction in the horizon.
+
+Window announcement respects a preparation offset (§5.1(a) mitigation (i)):
+announced windows start at least ``announce_offset`` after "now" so jobs have
+time to generate variants.
+"""
+from __future__ import annotations
+
+import bisect
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .types import SliceSpec, Window
+
+__all__ = ["SliceTimeline", "WindowPolicy", "announce_window"]
+
+
+class SliceTimeline:
+    """Committed busy intervals on one slice, kept sorted and merged."""
+
+    def __init__(self, spec: SliceSpec):
+        self.spec = spec
+        # disjoint, sorted busy intervals [(start, end)]
+        self._busy: List[Tuple[float, float]] = []
+
+    # -- mutation -----------------------------------------------------------
+    def commit(self, start: float, end: float) -> None:
+        if end <= start:
+            raise ValueError("empty commitment")
+        i = bisect.bisect_left(self._busy, (start, end))
+        # check neighbours for overlap (commitments must be conflict-free)
+        for j in (i - 1, i):
+            if 0 <= j < len(self._busy):
+                s, e = self._busy[j]
+                if start < e - 1e-12 and s < end - 1e-12:
+                    raise ValueError(
+                        f"overlapping commitment [{start},{end}) on {self.spec.slice_id}"
+                    )
+        self._busy.insert(i, (start, end))
+        self._merge()
+
+    def release(self, start: float, end: float) -> None:
+        """Carve [start, end) out of the busy set (failure / early finish).
+
+        Implemented as interval subtraction: adjacent commitments may have
+        been merged, so exact-match removal would be incorrect.
+        """
+        out: List[Tuple[float, float]] = []
+        for s, e in self._busy:
+            if e <= start + 1e-12 or s >= end - 1e-12:
+                out.append((s, e))
+                continue
+            if s < start - 1e-12:
+                out.append((s, start))
+            if e > end + 1e-12:
+                out.append((end, e))
+        self._busy = out
+
+    def _merge(self) -> None:
+        merged: List[Tuple[float, float]] = []
+        for s, e in self._busy:
+            if merged and s <= merged[-1][1] + 1e-12:
+                merged[-1] = (merged[-1][0], max(merged[-1][1], e))
+            else:
+                merged.append((s, e))
+        self._busy = merged
+
+    # -- queries --------------------------------------------------------------
+    def busy(self) -> Sequence[Tuple[float, float]]:
+        return tuple(self._busy)
+
+    def gaps(self, t_from: float, horizon: float) -> List[Tuple[float, float]]:
+        """Idle [start, end) intervals within [t_from, t_from + horizon)."""
+        t_end = t_from + horizon
+        out: List[Tuple[float, float]] = []
+        cur = t_from
+        for s, e in self._busy:
+            if e <= t_from:
+                continue
+            if s >= t_end:
+                break
+            if s > cur:
+                out.append((cur, min(s, t_end)))
+            cur = max(cur, e)
+        if cur < t_end:
+            out.append((cur, t_end))
+        return [(s, e) for s, e in out if e - s > 1e-12]
+
+    def idle_fraction(self, t_from: float, horizon: float) -> float:
+        idle = sum(e - s for s, e in self.gaps(t_from, horizon))
+        return idle / horizon if horizon > 0 else 0.0
+
+    def busy_until(self, t: float) -> float:
+        """End of the interval covering t (t itself if idle)."""
+        for s, e in self._busy:
+            if s <= t < e:
+                return e
+        return t
+
+
+@dataclass(frozen=True)
+class WindowPolicy:
+    kind: str = "earliest"  # earliest | largest | best_fit | slack
+    horizon: float = 1000.0  # lookahead for gap derivation
+    announce_offset: float = 0.0  # §5.1(a)(i): bid-preparation time offset
+    min_gap: float = 1.0  # don't announce gaps shorter than this (≈ τ_min)
+
+
+def announce_window(
+    slices: Dict[str, SliceTimeline],
+    now: float,
+    policy: WindowPolicy,
+    *,
+    exclude: Optional[set] = None,
+) -> Optional[Window]:
+    """Pick ONE window to announce this iteration (A3: one w* per iteration).
+
+    Returns None when no gap of at least ``min_gap`` exists in the horizon.
+    ``exclude`` suppresses windows already announced and left unfilled this
+    round-robin pass (avoids re-announcing a dead window forever).
+    """
+    exclude = exclude or set()
+    t0 = now + policy.announce_offset
+    candidates: List[Tuple[Window, float]] = []  # (window, policy key)
+    for sid, tl in slices.items():
+        for s, e in tl.gaps(t0, policy.horizon):
+            if e - s < policy.min_gap:
+                continue
+            w = Window(slice_id=sid, capacity=tl.spec.capacity_bytes, t_min=s, duration=e - s)
+            if (sid, round(s, 9)) in exclude:
+                continue
+            if policy.kind == "earliest":
+                key = (s, -(e - s))
+            elif policy.kind == "largest":
+                key = (-(e - s), s)
+            elif policy.kind == "best_fit":
+                key = (e - s, s)
+            elif policy.kind == "slack":
+                key = (-tl.idle_fraction(t0, policy.horizon), s)
+            else:
+                raise ValueError(f"unknown window policy {policy.kind}")
+            candidates.append((w, key))
+    if not candidates:
+        return None
+    candidates.sort(key=lambda c: c[1])
+    return candidates[0][0]

@@ -1,0 +1,189 @@
+"""Weighted Interval Scheduling (paper §4.4, `SelectBestCompatibleVariants`).
+
+The per-window clearing step: given M candidate variants, each an interval
+[t_start, t_end] with weight Score(v) ≥ 0, select the maximum-total-score
+subset of pairwise non-overlapping intervals.
+
+Classical DP after sorting by end time — O(M log M):
+
+    p(j) = largest i < j with end_i <= start_j        (binary search)
+    dp[j] = max(dp[j-1], w_j + dp[p(j)])
+
+Three implementations:
+
+* :func:`wis_select`       — numpy host path (the scheduler's default).
+* :func:`wis_select_jax`   — jit-able JAX path (sort + searchsorted +
+                             ``lax.scan`` DP + ``lax.while_loop`` backtrack);
+                             mirrored by the Pallas kernel ``kernels/wis_dp``.
+* :func:`wis_brute_force`  — O(2^M) oracle for property tests.
+
+Intervals are treated as half-open [start, end): touching intervals
+(end_i == start_j) are compatible, matching the paper's worked example where
+(40,47) and (47,50) are both selected.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["wis_select", "wis_select_jax", "wis_brute_force", "total_weight"]
+
+
+def _validate(starts, ends, weights):
+    starts = np.asarray(starts, dtype=np.float64)
+    ends = np.asarray(ends, dtype=np.float64)
+    weights = np.asarray(weights, dtype=np.float64)
+    if not (starts.shape == ends.shape == weights.shape):
+        raise ValueError("starts/ends/weights must have identical shapes")
+    if np.any(ends < starts):
+        raise ValueError("interval with end < start")
+    if np.any(weights < -1e-12):
+        raise ValueError("WIS optimality requires non-negative weights")
+    return starts, ends, weights
+
+
+def wis_select(
+    starts: Sequence[float],
+    ends: Sequence[float],
+    weights: Sequence[float],
+) -> Tuple[np.ndarray, float]:
+    """Optimal WIS. Returns (selected original indices asc by end, total).
+
+    O(M log M): numpy argsort + searchsorted + a single DP pass.
+    """
+    starts, ends, weights = _validate(starts, ends, weights)
+    m = starts.shape[0]
+    if m == 0:
+        return np.zeros((0,), dtype=np.int64), 0.0
+
+    order = np.argsort(ends, kind="stable")
+    s, e, w = starts[order], ends[order], weights[order]
+
+    # p[j]: number of intervals (in sorted order) ending <= s[j]; dp is
+    # 1-indexed with dp[0] = 0 so p[j] indexes dp directly.
+    p = np.searchsorted(e, s, side="right")
+
+    dp = np.zeros(m + 1, dtype=np.float64)
+    take = np.zeros(m, dtype=bool)
+    for j in range(m):
+        with_j = w[j] + dp[p[j]]
+        if with_j > dp[j]:  # strict: prefer fewer intervals on ties
+            dp[j + 1] = with_j
+            take[j] = True
+        else:
+            dp[j + 1] = dp[j]
+
+    # Backtrack.
+    sel: List[int] = []
+    j = m
+    while j > 0:
+        if take[j - 1]:
+            sel.append(j - 1)
+            j = p[j - 1]
+        else:
+            j -= 1
+    sel_sorted = np.array(sel[::-1], dtype=np.int64)
+    return order[sel_sorted], float(dp[m])
+
+
+def wis_brute_force(
+    starts: Sequence[float],
+    ends: Sequence[float],
+    weights: Sequence[float],
+) -> Tuple[np.ndarray, float]:
+    """Exhaustive oracle (use only for small M in tests)."""
+    starts, ends, weights = _validate(starts, ends, weights)
+    m = starts.shape[0]
+    if m > 22:
+        raise ValueError("brute force limited to M <= 22")
+    best_mask, best_val = 0, 0.0
+    for mask in range(1 << m):
+        idx = [i for i in range(m) if mask >> i & 1]
+        ok = True
+        for a in range(len(idx)):
+            for b in range(a + 1, len(idx)):
+                i, j = idx[a], idx[b]
+                if starts[i] < ends[j] - 1e-12 and starts[j] < ends[i] - 1e-12:
+                    ok = False
+                    break
+            if not ok:
+                break
+        if ok:
+            val = float(sum(weights[i] for i in idx))
+            if val > best_val + 1e-15:
+                best_val, best_mask = val, mask
+    sel = np.array([i for i in range(m) if best_mask >> i & 1], dtype=np.int64)
+    return sel, best_val
+
+
+def total_weight(weights: Sequence[float], selected: Sequence[int]) -> float:
+    w = np.asarray(weights, dtype=np.float64)
+    return float(w[np.asarray(selected, dtype=np.int64)].sum()) if len(selected) else 0.0
+
+
+# ---------------------------------------------------------------------------
+# JAX path — jit-able, fixed-size, mask-based (device-resident clearing)
+# ---------------------------------------------------------------------------
+
+
+def wis_select_jax(starts, ends, weights, valid=None):
+    """Jit-able WIS over a fixed-size padded pool.
+
+    Args:
+      starts, ends, weights: (M,) float arrays (padded entries arbitrary).
+      valid: optional (M,) bool mask; invalid entries are excluded.
+
+    Returns:
+      (selected_mask (M,) bool in ORIGINAL order, total_score scalar).
+
+    The DP is a ``lax.scan`` over sorted intervals; backtracking is a
+    ``lax.while_loop``.  Padded/invalid entries get weight 0 and a
+    point-interval at +inf so they never affect the optimum.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    starts = jnp.asarray(starts, dtype=jnp.float32)
+    ends = jnp.asarray(ends, dtype=jnp.float32)
+    weights = jnp.asarray(weights, dtype=jnp.float32)
+    m = starts.shape[0]
+    if valid is None:
+        valid = jnp.ones((m,), dtype=bool)
+    else:
+        valid = jnp.asarray(valid, dtype=bool)
+
+    big = jnp.float32(3.0e38)
+    s = jnp.where(valid, starts, big)
+    e = jnp.where(valid, ends, big)
+    w = jnp.where(valid, weights, 0.0)
+
+    order = jnp.argsort(e, stable=True)
+    s_o, e_o, w_o = s[order], e[order], w[order]
+    p = jnp.searchsorted(e_o, s_o, side="right")  # (M,) into dp[0..M]
+
+    def dp_step(dp, j):
+        with_j = w_o[j] + dp[p[j]]
+        without_j = dp[j]
+        take = with_j > without_j
+        dp = dp.at[j + 1].set(jnp.where(take, with_j, without_j))
+        return dp, take
+
+    dp0 = jnp.zeros((m + 1,), dtype=jnp.float32)
+    dp, take = jax.lax.scan(dp_step, dp0, jnp.arange(m))
+
+    def backtrack(state):
+        j, sel = state
+        t = take[j - 1]
+        sel = sel.at[j - 1].set(t)
+        j = jnp.where(t, p[j - 1], j - 1)
+        return j, sel
+
+    def cond(state):
+        return state[0] > 0
+
+    sel_sorted = jnp.zeros((m,), dtype=bool)
+    _, sel_sorted = jax.lax.while_loop(cond, backtrack, (jnp.int32(m), sel_sorted))
+
+    sel_mask = jnp.zeros((m,), dtype=bool).at[order].set(sel_sorted)
+    return sel_mask & valid, dp[m]

@@ -1,0 +1,2 @@
+"""Deterministic synthetic data pipeline."""
+from .pipeline import DataConfig, SyntheticTokens, prefetch  # noqa: F401

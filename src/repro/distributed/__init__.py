@@ -1,0 +1,2 @@
+"""Distribution layer: sharding rules, collectives, compression, pipeline."""
+from .sharding import ShardingRules, named_sharding_tree, resolve_param_specs  # noqa: F401

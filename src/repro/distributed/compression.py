@@ -1,0 +1,86 @@
+"""Int8 gradient compression with error feedback (beyond-paper, DESIGN §5).
+
+For cross-pod data parallelism the gradient all-reduce crosses the slow
+inter-pod links.  We compress per-block to int8 with a f32 scale before the
+reduction and keep the quantization residual in an error-feedback buffer so
+the bias vanishes over steps (Seide et al. 2014 / 1-bit Adam lineage).
+
+Usage inside the train step (pure, jit-able):
+
+    comp, err = compress(grads, err)        # int8 payload + carried error
+    grads = decompress(comp)                 # dequantized f32 view
+    # ... psum/all-reduce happens on the int8 payload via GSPMD when the
+    # arrays are sharded on the pod axis; here we expose the quantize /
+    # dequantize transform and the error feedback accounting.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_error", "compress", "decompress", "compressed_allreduce"]
+
+BLOCK = 2048
+
+
+def init_error(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quant_one(g: jnp.ndarray, e: jnp.ndarray):
+    g = g.astype(jnp.float32) + e
+    flat = g.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    deq = (q.astype(jnp.float32) * scale).reshape(-1)[:n].reshape(g.shape)
+    err = g - deq
+    return {"q": q, "scale": scale, "shape": g.shape}, err
+
+
+def compress(grads, err) -> Tuple[Any, Any]:
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(err)
+    outs = [_quant_one(g, e) for g, e in zip(flat_g, flat_e)]
+    comp = tdef.unflatten([o[0] for o in outs])
+    new_err = tdef.unflatten([o[1] for o in outs])
+    return comp, new_err
+
+
+def decompress(comp):
+    def one(c):
+        n = 1
+        for d in c["shape"]:
+            n *= d
+        deq = (c["q"].astype(jnp.float32) * c["scale"]).reshape(-1)[:n]
+        return deq.reshape(c["shape"])
+    return jax.tree.map(one, comp, is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+
+
+def compressed_allreduce(grads, err, axis_name: str):
+    """shard_map-side helper: quantize → psum(int32) → dequantize.
+
+    int8 payloads are summed in int32 (no overflow for ≤ 2^23 replicas),
+    then rescaled by the mean of the per-block scales — an approximation
+    whose residual lands in the error-feedback buffer next step.
+    """
+    comp, new_err = compress(grads, err)
+
+    def reduce_one(c):
+        q32 = jax.lax.psum(c["q"].astype(jnp.int32), axis_name)
+        scale = jax.lax.pmean(c["scale"], axis_name)
+        n = 1
+        for d in c["shape"]:
+            n *= d
+        deq = (q32.astype(jnp.float32) * scale).reshape(-1)[:n]
+        nrep = jax.lax.psum(1, axis_name)
+        return deq.reshape(c["shape"]) / nrep
+
+    reduced = jax.tree.map(
+        reduce_one, comp, is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+    return reduced, new_err

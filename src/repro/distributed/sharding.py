@@ -1,0 +1,151 @@
+"""Sharding rules: logical axis names → mesh PartitionSpecs.
+
+Parameters carry LOGICAL spec tuples ("fsdp" | "model" | None per dim,
+models/params.py); activations are constrained by KIND strings inside the
+model code.  This module resolves both against a concrete mesh:
+
+  fsdp  → ``fsdp_axes``  (single-pod: ("data",); multi-pod: ("pod","data"))
+  model → ("model",)
+
+Activation kinds:
+  btd   (B, S, D)        residual stream
+  btf   (B, S, F)        mlp hidden          — F on model
+  btm   (B, S, Dm)       ssm/rglru inner     — Dm on model
+  bshk  (B, S, H, hd)    q/attn-out          — H or hd on model (attn_shard)
+  btkk  (B, T, Hkv, hd)  k/v (+cache)        — kv heads if divisible; decode
+                         caches may instead shard T on model (flash-decode,
+                         ``shard_kv_seq``)
+  btv   (B, S, Vp)       logits              — Vp on model
+  gecd/gecf              MoE dispatch tensors
+
+``batch_axes`` shards B; ``seq_axes`` optionally shards S (sequence
+parallelism for long-context cells where B < mesh rows).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+__all__ = ["ShardingRules", "resolve_param_specs", "named_sharding_tree"]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    fsdp_axes: Tuple[str, ...] = ("data",)
+    model_axes: Tuple[str, ...] = ("model",)
+    batch_axes: Tuple[str, ...] = ("data",)
+    seq_axes: Tuple[str, ...] = ()  # sequence parallelism (activations)
+    attn_shard: str = "heads"  # heads | headdim (must match the config)
+    kv_heads_shardable: bool = True
+    shard_kv_seq: bool = False  # decode KV cache: T on model axis
+    shard_moe_expert: bool = True  # experts on model (else expert-FFN dim)
+
+    # -- helpers -------------------------------------------------------------
+    def _b(self):
+        return self.batch_axes if self.batch_axes else None
+
+    def _s(self):
+        return self.seq_axes if self.seq_axes else None
+
+    def _m(self):
+        return self.model_axes if self.model_axes else None
+
+    def spec(self, kind: str) -> PS:
+        b, s, m = self._b(), self._s(), self._m()
+        # sequence parallelism shares the model axis: only the residual
+        # stream (btd) carries the seq sharding; TP'd interiors drop it
+        # (GSPMD inserts the all-gather/reduce-scatter at the boundary)
+        s_in = None if (s and m and set(s) & set(m)) else s
+        if kind == "btd":
+            return PS(b, s, None)
+        if kind in ("btf", "btm"):
+            return PS(b, s_in, m)
+        if kind == "bshk":
+            if self.attn_shard == "heads":
+                return PS(b, s_in, m, None)
+            return PS(b, s_in, None, m)
+        if kind == "btkk":
+            if self.shard_kv_seq:
+                return PS(b, m, None, None)
+            if self.attn_shard == "heads" and self.kv_heads_shardable:
+                return PS(b, s_in, m, None)
+            if self.attn_shard == "headdim":
+                return PS(b, s_in, None, m)
+            return PS(b, s_in, None, None)
+        if kind == "btv":
+            return PS(b, s_in, m)
+        if kind == "bshk_seq":  # Ulysses interior: S on model, heads whole
+            return PS(b, m, None, None)
+        if kind == "btkk_full":  # Ulysses K/V: gathered heads + seq
+            return PS(b, None, None, None)
+        if kind == "xbtkk":  # stacked cross-attn K/V: (L, B, T, Hkv, hd)
+            if self.attn_shard == "heads" and self.kv_heads_shardable:
+                return PS(None, b, None, m, None)
+            if self.attn_shard == "headdim":
+                return PS(None, b, None, None, m)
+            return PS(None, b, None, None, None)
+        if kind == "gecd":
+            return PS(b, m if self.shard_moe_expert else None, None, None)
+        if kind == "gecf":
+            return PS(b, m, None, None) if self.shard_moe_expert \
+                else PS(b, None, None, m)
+        raise ValueError(f"unknown activation kind {kind}")
+
+    def act(self, x, kind: str):
+        spec = guard_spec(self.spec(kind), x.shape, dict(self.mesh.shape))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec)
+        )
+
+    # -- parameter specs --------------------------------------------------------
+    def resolve(self, logical: Tuple) -> PS:
+        out = []
+        for name in logical:
+            if name is None:
+                out.append(None)
+            elif name == "fsdp":
+                out.append(self.fsdp_axes if self.fsdp_axes else None)
+            elif name == "model":
+                out.append(self.model_axes if self.model_axes else None)
+            else:
+                raise ValueError(f"unknown logical axis {name}")
+        return PS(*out)
+
+
+def guard_spec(spec: PS, shape, mesh_shape: dict) -> PS:
+    """Drop spec entries whose mesh extent does not divide the dim.
+
+    (e.g. the 1-token k/v write against a decode cache whose T is
+    model-sharded) — avoids GSPMD padding surprises.  Pure function,
+    unit-tested directly.
+    """
+    cleaned = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            cleaned.append(None)
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        size = 1
+        for a in axes:
+            size *= mesh_shape[a]
+        cleaned.append(entry if dim % size == 0 else None)
+    return PS(*cleaned)
+
+
+def resolve_param_specs(logical_tree, rules: ShardingRules):
+    """Logical spec tuples → PartitionSpec pytree."""
+    return jax.tree.map(
+        rules.resolve, logical_tree, is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+
+def named_sharding_tree(spec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, PS),
+    )

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel subpackage ships three files:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd dispatch wrapper (pallas on TPU, interpret/XLA on CPU)
+  ref.py    — pure-jnp oracle, the correctness ground truth
+
+Kernels:
+  flash_attention — online-softmax attention (GQA, causal, sliding window)
+  linear_scan     — h_t = a_t h_{t-1} + b_t (Mamba / RG-LRU recurrence)
+  jasda_score     — paper §4.2: batched variant scoring + FMP safety
+  wis_dp          — paper §4.4: on-device weighted-interval-scheduling DP
+"""
+from .flash_attention.ops import flash_attention  # noqa: F401
+from .linear_scan.ops import linear_scan  # noqa: F401
+from .jasda_score.ops import score_variants  # noqa: F401
+from .wis_dp.ops import wis_clear  # noqa: F401

@@ -1,0 +1,42 @@
+"""Shared kernel utilities: dispatch policy + numerics helpers."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["use_interpret", "log_ndtr", "NEG_INF"]
+
+NEG_INF = -1e30  # large-negative for masking (avoids inf-inf NaNs in bf16)
+
+
+@functools.cache
+def use_interpret() -> bool:
+    """Pallas TPU kernels run in interpret mode on non-TPU backends.
+
+    interpret=True executes the kernel body with jnp on CPU — bit-identical
+    control flow to the TPU lowering, used for CI validation against ref.py.
+    """
+    return jax.default_backend() != "tpu"
+
+
+def log_ndtr(z: jnp.ndarray) -> jnp.ndarray:
+    """Numerically stable log Φ(z) built from lax primitives only.
+
+    Safe inside Pallas kernel bodies (no scipy).  For z ≥ −1 uses
+    log1p(−Φ̄(z)) via erfc; for z < −1 uses the erfc-scaled form
+    log(erfcx(−z/√2)/2) − z²/2, stable far into the left tail.
+    """
+    z = jnp.asarray(z)
+    sqrt_half = 0.7071067811865476
+    x = z * sqrt_half
+    # right/central region
+    right = jnp.log1p(-0.5 * jax.lax.erfc(x))
+    # left tail: Φ(z) = erfc(-x)/2 = erfcx(-x)·exp(-x²)/2
+    left = jnp.log(0.5 * jax.lax.erfc(-x).clip(min=1e-300))
+    # erfc underflows around z < -37 in f64 / z < -13 in f32; asymptotic form:
+    #   logΦ(z) ≈ -z²/2 - log(-z√(2π))  for z → -∞
+    asym = -0.5 * z * z - jnp.log(-z * 2.5066282746310002 + 1e-30)
+    out = jnp.where(z >= -1.0, right, jnp.where(z >= -10.0, left, asym))
+    return out

@@ -1,0 +1,162 @@
+"""Flash attention as a Pallas TPU kernel (online softmax, VMEM tiling).
+
+TPU adaptation of the GPU flash algorithm:
+  * grid = (B, Hq, nQ, nK) with the LAST axis "arbitrary" — TPU executes the
+    grid sequentially in row-major order, so the (m, l, acc) running state
+    for one (b, h, iq) lives in VMEM scratch across the nK sweep (the GPU
+    version keeps it in registers/shared memory across the inner loop).
+  * BlockSpecs put a (Bq, D) query tile and (Bk, D) key/value tiles in VMEM;
+    Bq = Bk = 128 aligns the MXU contraction dims (multiples of 128).
+  * GQA is expressed in the k/v index_map (head h reads kv head h // group),
+    so no repeated-KV materialization ever happens.
+  * causal + sliding-window masks are applied with position arithmetic; a
+    fully-masked k block is skipped with @pl.when (the sequential-grid
+    analogue of the GPU early-exit).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from ..common import NEG_INF
+
+__all__ = ["mha_pallas"]
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref,  # VMEM tiles
+    o_ref,  # output tile
+    m_scr, l_scr, acc_scr,  # VMEM scratch carried across the nK axis
+    *,
+    scale: float,
+    causal: bool,
+    window: Optional[int],
+    block_q: int,
+    block_k: int,
+    n_k: int,
+    q_offset: int,
+):
+    iq, ik = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0) + q_offset
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    # Block-level skip: with causality the earliest q in this tile bounds
+    # which k tiles can contribute; same for the window's trailing edge.
+    first_q = iq * block_q + q_offset
+    last_q = first_q + block_q - 1
+    needed = True
+    if causal:
+        needed = ik * block_k <= last_q
+    if window is not None:
+        needed = jnp.logical_and(needed, (ik + 1) * block_k - 1 > first_q - window)
+
+    @pl.when(needed)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)  # (Bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)  # (Bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)  # (Bk, D)
+
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (Bq, Bk)
+
+        mask = jnp.ones((block_q, block_k), dtype=bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[:, 0:1]  # (Bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+
+        p = jnp.exp(s - m_new)  # (Bq, Bk)
+        alpha = jnp.exp(m_prev - m_new)  # (Bq, 1)
+
+        l_new = alpha * l_scr[:, 0:1] + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[:, 0:1] = m_new
+        l_scr[:, 0:1] = l_new
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        l = l_scr[:, 0:1]
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "scale", "block_q", "block_k", "interpret", "q_offset",
+    ),
+)
+def mha_pallas(
+    q: jnp.ndarray,  # (B, Hq, Sq, D)
+    k: jnp.ndarray,  # (B, Hkv, Sk, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    q_offset: int = 0,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, "seq dims must tile"
+    n_q, n_k = sq // block_q, sk // block_k
+
+    grid = (b, hq, n_q, n_k)
+    kernel = functools.partial(
+        _attn_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        n_k=n_k,
+        q_offset=q_offset,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b_, h, iq, ik: (b_, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h, iq, ik, g=group: (b_, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, h, iq, ik, g=group: (b_, h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b_, h, iq, ik: (b_, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),  # m
+            pltpu.VMEM((block_q, 1), jnp.float32),  # l
+            pltpu.VMEM((block_q, d), jnp.float32),  # acc
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)

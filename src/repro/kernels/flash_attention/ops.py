@@ -1,0 +1,55 @@
+"""Jit'd dispatch wrapper for flash attention.
+
+``flash_attention`` picks the implementation:
+  * ``impl="pallas"``     — the TPU kernel (compiled on TPU, interpret on CPU)
+  * ``impl="xla"``        — the pure-jnp reference (materialized softmax);
+                            the right choice inside pjit'd model code on CPU
+                            and the GSPMD-sharded dry-run.
+  * ``impl=None`` (auto)  — pallas on TPU backends, xla elsewhere.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from ..common import use_interpret
+from .kernel import mha_pallas
+from .ref import mha_reference
+
+__all__ = ["flash_attention"]
+
+
+def flash_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+    impl: Optional[str] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+):
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl == "xla":
+        return mha_reference(
+            q, k, v, causal=causal, window=window, scale=scale, q_offset=q_offset
+        )
+    if impl == "pallas":
+        return mha_pallas(
+            q,
+            k,
+            v,
+            causal=causal,
+            window=window,
+            scale=scale,
+            q_offset=q_offset,
+            block_q=block_q,
+            block_k=block_k,
+            interpret=use_interpret(),
+        )
+    raise ValueError(f"unknown impl {impl}")

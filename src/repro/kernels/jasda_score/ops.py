@@ -1,0 +1,106 @@
+"""Jit'd wrapper for batched variant scoring: padding + dispatch.
+
+Pads M to the block multiple (padded rows are self-masking: sigma=0 with
+mu > capacity makes them ineligible, score 0) and T/F to lane-friendly
+sizes, then calls the Pallas kernel (TPU / interpret) or the jnp reference.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..common import use_interpret
+from .kernel import score_variants_pallas
+from .ref import score_variants_reference
+
+__all__ = ["score_variants", "pool_to_arrays"]
+
+
+def _pad_rows(x: jnp.ndarray, m_pad: int, fill: float = 0.0) -> jnp.ndarray:
+    if x.shape[0] == m_pad:
+        return x
+    pad = jnp.full((m_pad - x.shape[0],) + x.shape[1:], fill, x.dtype)
+    return jnp.concatenate([x, pad], axis=0)
+
+
+def score_variants(
+    feat_job,
+    feat_sys,
+    alphas,
+    betas,
+    mu,
+    sigma,
+    *,
+    lam: float,
+    capacity: float,
+    theta: float,
+    impl: Optional[str] = None,
+    block_m: int = 256,
+):
+    feat_job = jnp.asarray(feat_job, jnp.float32)
+    feat_sys = jnp.asarray(feat_sys, jnp.float32)
+    alphas = jnp.asarray(alphas, jnp.float32)
+    betas = jnp.asarray(betas, jnp.float32)
+    mu = jnp.asarray(mu, jnp.float32)
+    sigma = jnp.asarray(sigma, jnp.float32)
+
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return score_variants_reference(
+            feat_job, feat_sys, alphas, betas, mu, sigma,
+            lam=lam, capacity=capacity, theta=theta,
+        )
+
+    m = feat_job.shape[0]
+    bm = min(block_m, max(8, m))
+    m_pad = -(-m // bm) * bm
+    fj = _pad_rows(feat_job, m_pad)
+    fs = _pad_rows(feat_sys, m_pad)
+    # padded rows: deterministic violation -> ineligible by construction
+    mu_p = _pad_rows(mu, m_pad, fill=float(capacity) * 2.0 + 1.0)
+    sg_p = _pad_rows(sigma, m_pad, fill=0.0)
+    score, elig, = score_variants_pallas(
+        fj, fs, alphas, betas, mu_p, sg_p,
+        lam=lam, capacity=capacity, theta=theta,
+        block_m=bm, interpret=use_interpret(),
+    )[:2]
+    # kernel does not return p_exceed; recompute lazily only if needed
+    return score[:m], elig[:m], None
+
+
+def pool_to_arrays(
+    variants,
+    window,
+    policy,
+    *,
+    grid: int = 32,
+) -> Tuple[np.ndarray, ...]:
+    """Host-side helper: struct-of-arrays feature/FMP matrices for a pool.
+
+    Feature order must match the α/β vectors built here (job: jct, qos,
+    progress; sys: utilization, slack, age placeholder 0 — ages are added by
+    the caller when known).
+    """
+    m = len(variants)
+    fj = np.zeros((m, 3), np.float32)
+    fs = np.zeros((m, 3), np.float32)
+    mu = np.zeros((m, grid), np.float32)
+    sg = np.zeros((m, grid), np.float32)
+    for i, v in enumerate(variants):
+        d = v.declared_features
+        fj[i] = [d.get("jct", 0.0), d.get("qos", 0.0), d.get("progress", 0.0)]
+        util = min(1.0, v.duration / max(window.duration, 1e-9))
+        lead = max(0.0, (v.t_start - window.t_min) / max(window.duration, 1e-9))
+        fs[i] = [util, 1.0 - lead, 0.0]
+        mu[i], sg[i] = v.fmp.grid(grid)
+    alphas = np.array(
+        [policy.alphas.get("jct", 0.0), policy.alphas.get("qos", 0.0),
+         policy.alphas.get("progress", 0.0)], np.float32)
+    betas = np.array(
+        [policy.betas.get("utilization", 0.0), policy.betas.get("slack", 0.0),
+         policy.betas.get("age", 0.0)], np.float32)
+    return fj, fs, alphas, betas, mu, sg

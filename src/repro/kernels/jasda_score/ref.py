@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for batched variant scoring + safety (paper §4.1–§4.2).
+
+Given M variants with job-side features X_j (M, Fj), system-side features
+X_s (M, Fs), and per-variant FMP grids (mu, sigma) over T points:
+
+    h̃        = clip(X_j @ α, 0, 1)
+    f̃_sys    = clip(X_s @ β, 0, 1)
+    score     = λ·h̃ + (1−λ)·f̃_sys                      (Eq. 4)
+    log_surv  = Σ_t log Φ((c − μ_t)/σ_t)                 (grid safety)
+    p_exceed  = 1 − exp(log_surv)
+    eligible  = p_exceed ≤ θ                              (condition (a))
+
+Scores of ineligible variants are zeroed (they never enter clearing).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..common import log_ndtr
+
+__all__ = ["score_variants_reference"]
+
+
+def score_variants_reference(
+    feat_job: jnp.ndarray,  # (M, Fj)
+    feat_sys: jnp.ndarray,  # (M, Fs)
+    alphas: jnp.ndarray,  # (Fj,)
+    betas: jnp.ndarray,  # (Fs,)
+    mu: jnp.ndarray,  # (M, T)
+    sigma: jnp.ndarray,  # (M, T)
+    *,
+    lam: float,
+    capacity: float,
+    theta: float,
+):
+    h = jnp.clip(feat_job @ alphas, 0.0, 1.0)
+    f = jnp.clip(feat_sys @ betas, 0.0, 1.0)
+    score = lam * h + (1.0 - lam) * f
+
+    z = (capacity - mu) / jnp.maximum(sigma, 1e-30)
+    z = jnp.where(sigma > 0, z, jnp.where(mu <= capacity, jnp.inf, -jnp.inf))
+    logphi = jnp.where(jnp.isposinf(z), 0.0, log_ndtr(z))
+    log_surv = jnp.sum(logphi, axis=-1)
+    p_exceed = -jnp.expm1(log_surv)
+    eligible = p_exceed <= theta
+    return jnp.where(eligible, score, 0.0), eligible, p_exceed

@@ -1,0 +1,92 @@
+"""Diagonal linear recurrence h_t = a_t·h_{t-1} + b_t as a Pallas TPU kernel.
+
+TPU adaptation of GPU chunked-scan kernels (Mamba's selective scan /
+RG-LRU): GPUs split T across thread blocks and stitch with inter-block
+carries in shared memory; TPU grids execute SEQUENTIALLY in row-major
+order, so the carry simply lives in VMEM scratch across the time-block
+axis — no inter-block protocol needed.
+
+  grid = (B, nD, nT), nT last ("arbitrary") so time advances innermost;
+  blocks (1, Bt, Bd) of a and b stream through VMEM; the (1, Bd) carry
+  persists in scratch.  Within a block the recurrence is a fori_loop over
+  Bt rows — elementwise VPU work vectorized across the 128-wide D lanes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+__all__ = ["linear_scan_pallas"]
+
+
+def _scan_kernel(h0_ref, a_ref, b_ref, o_ref, hT_ref, carry, *, block_t: int, n_t: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        carry[...] = h0_ref[...].astype(jnp.float32)  # (1, Bd)
+
+    a = a_ref[0].astype(jnp.float32)  # (Bt, Bd)
+    b = b_ref[0].astype(jnp.float32)
+
+    def body(t, h):
+        h = a[t] * h + b[t]
+        o_ref[0, t, :] = h.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_t, body, carry[0])
+    carry[0, :] = h
+
+    @pl.when(it == n_t - 1)
+    def _fin():
+        hT_ref[0] = h.astype(hT_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_d", "interpret"))
+def linear_scan_pallas(
+    a: jnp.ndarray,  # (B, T, D)
+    b: jnp.ndarray,  # (B, T, D)
+    h0: Optional[jnp.ndarray] = None,  # (B, D)
+    *,
+    block_t: int = 256,
+    block_d: int = 512,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    B, T, D = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, D), a.dtype)
+    block_t = min(block_t, T)
+    block_d = min(block_d, D)
+    assert T % block_t == 0 and D % block_d == 0, "T and D must tile"
+    n_t, n_d = T // block_t, D // block_d
+
+    grid = (B, n_d, n_t)  # time innermost → sequential carry is valid
+    kernel = functools.partial(_scan_kernel, block_t=block_t, n_t=n_t)
+    out, hT = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_d), lambda b_, id_, it: (b_, id_)),
+            pl.BlockSpec((1, block_t, block_d), lambda b_, id_, it: (b_, it, id_)),
+            pl.BlockSpec((1, block_t, block_d), lambda b_, id_, it: (b_, it, id_)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_t, block_d), lambda b_, id_, it: (b_, it, id_)),
+            pl.BlockSpec((1, block_d), lambda b_, id_, it: (b_, id_)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, D), a.dtype),
+            jax.ShapeDtypeStruct((B, D), a.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, block_d), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(h0, a, b)
+    return out, hT

@@ -1,0 +1,34 @@
+"""Jit'd dispatch wrapper for the diagonal linear recurrence.
+
+``linear_scan`` picks the implementation:
+  * ``impl="pallas"``  — sequential-grid TPU kernel (interpret on CPU)
+  * ``impl="assoc"``   — jax.lax.associative_scan (log-depth, XLA-fusible;
+                         default under pjit/GSPMD and on CPU)
+  * ``impl="scan"``    — jax.lax.scan (serial; smallest memory)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from ..common import use_interpret
+from .kernel import linear_scan_pallas
+from .ref import linear_scan_associative, linear_scan_reference
+
+__all__ = ["linear_scan"]
+
+
+def linear_scan(a, b, h0=None, *, impl: Optional[str] = None,
+                block_t: int = 256, block_d: int = 512):
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "assoc"
+    if impl == "assoc":
+        return linear_scan_associative(a, b, h0)
+    if impl == "scan":
+        return linear_scan_reference(a, b, h0)
+    if impl == "pallas":
+        return linear_scan_pallas(
+            a, b, h0, block_t=block_t, block_d=block_d, interpret=use_interpret()
+        )
+    raise ValueError(f"unknown impl {impl}")

@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for the diagonal linear recurrence h_t = a_t·h_{t-1} + b_t.
+
+Two reference implementations:
+  * ``linear_scan_reference``       — jax.lax.scan over time (sequential).
+  * ``linear_scan_associative``     — jax.lax.associative_scan (log-depth);
+    this is also the XLA fast path used by models on non-TPU backends.
+
+Both return the full state trajectory h (B, T, D) and the final state.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["linear_scan_reference", "linear_scan_associative"]
+
+
+def linear_scan_reference(
+    a: jnp.ndarray,  # (B, T, D) decay
+    b: jnp.ndarray,  # (B, T, D) input
+    h0: Optional[jnp.ndarray] = None,  # (B, D)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    B, T, D = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, D), a.dtype)
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    hT, hs = jax.lax.scan(step, h0, (a.swapaxes(0, 1), b.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1), hT
+
+
+def linear_scan_associative(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    h0: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Blelloch-style: compose (a, b) pairs associatively along T."""
+    B, T, D = a.shape
+    if h0 is not None:
+        # fold h0 into the first step: h_1 = a_1 h0 + b_1
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    a_c, b_c = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return b_c, b_c[:, -1]

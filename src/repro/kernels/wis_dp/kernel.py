@@ -1,0 +1,67 @@
+"""WIS clearing DP as a Pallas TPU kernel (paper §4.4).
+
+Rationale: when the variant pool is produced on-device by ``jasda_score``,
+clearing on-device avoids a host round-trip per scheduling iteration — at
+high iteration rates (the paper's "fine-grained, high-frequency scheduling
+regimes") the PCIe hop would dominate.  A GPU port of this DP is a
+single-threaded loop in one thread block; the TPU version keeps the whole
+dp table VMEM-resident (M ≤ ~64k fits easily) and runs the recurrence as a
+sequential fori_loop with dynamic VMEM addressing — the grid has a single
+program, so there is no cross-core hazard.
+
+The O(M log M) sort + predecessor search stays OUTSIDE the kernel (ops.py:
+XLA sort/searchsorted are already optimal); the kernel is the O(M)
+data-dependent part XLA cannot fuse.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+__all__ = ["wis_dp_pallas"]
+
+
+def _dp_kernel(w_ref, p_ref, dp_ref, take_ref, dp_scr, *, m: int):
+    dp_scr[0, 0] = 0.0
+
+    def body(j, _):
+        w_j = w_ref[0, j]
+        p_j = p_ref[0, j]
+        with_j = w_j + dp_scr[0, p_j]
+        without_j = dp_scr[0, j]
+        take = with_j > without_j
+        dp_scr[0, j + 1] = jnp.where(take, with_j, without_j)
+        take_ref[0, j] = take.astype(jnp.int32)
+        dp_ref[0, j] = dp_scr[0, j + 1]
+        return 0
+
+    jax.lax.fori_loop(0, m, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wis_dp_pallas(weights: jnp.ndarray, pred: jnp.ndarray, *, interpret: bool = False):
+    """(M,) sorted-by-end weights + predecessor table → (dp, take)."""
+    m = weights.shape[0]
+    dp, take = pl.pallas_call(
+        functools.partial(_dp_kernel, m=m),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, m), jnp.float32),
+            jax.ShapeDtypeStruct((1, m), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, m + 1), jnp.float32)],
+        interpret=interpret,
+    )(weights[None, :].astype(jnp.float32), pred[None, :].astype(jnp.int32))
+    return dp[0], take[0].astype(bool)

@@ -1,0 +1,58 @@
+"""Jit'd wrapper: full on-device WIS clearing (sort → DP kernel → backtrack).
+
+``wis_clear`` has the same contract as ``core.wis.wis_select`` (returns
+selected ORIGINAL indices sorted ascending by end time + total weight), so
+it can be plugged into ``clearing.clear_window(selector=...)`` directly.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..common import use_interpret
+from .kernel import wis_dp_pallas
+from .ref import wis_dp_reference
+
+__all__ = ["wis_clear", "wis_dp"]
+
+
+def wis_dp(weights, pred, *, impl: Optional[str] = None):
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return wis_dp_reference(jnp.asarray(weights), jnp.asarray(pred))
+    return wis_dp_pallas(
+        jnp.asarray(weights), jnp.asarray(pred), interpret=use_interpret()
+    )
+
+
+def wis_clear(starts, ends, weights, *, impl: Optional[str] = None) -> Tuple[np.ndarray, float]:
+    """Drop-in optimal WIS selector backed by the device DP."""
+    starts = np.asarray(starts, np.float64)
+    ends = np.asarray(ends, np.float64)
+    weights = np.asarray(weights, np.float64)
+    m = starts.shape[0]
+    if m == 0:
+        return np.zeros((0,), np.int64), 0.0
+
+    order = np.argsort(ends, kind="stable")
+    s, e, w = starts[order], ends[order], weights[order]
+    pred = np.searchsorted(e, s, side="right").astype(np.int32)
+
+    dp, take = wis_dp(w.astype(np.float32), pred, impl=impl)
+    dp = np.asarray(dp)
+    take = np.asarray(take)
+
+    sel = []
+    j = m
+    while j > 0:
+        if take[j - 1]:
+            sel.append(j - 1)
+            j = pred[j - 1]
+        else:
+            j -= 1
+    sel = np.array(sel[::-1], dtype=np.int64)
+    return order[sel], float(dp[-1]) if m else 0.0

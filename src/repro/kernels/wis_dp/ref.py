@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the WIS clearing DP (paper §4.4).
+
+Operates on intervals ALREADY sorted by end time with precomputed
+predecessors p(j) (both produced by ops.py on host/device):
+
+    dp[0] = 0;  dp[j+1] = max(dp[j], w[j] + dp[p[j]])
+    take[j] = (w[j] + dp[p[j]] > dp[j])
+
+Returns (dp[1:], take); backtracking runs in ops.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["wis_dp_reference"]
+
+
+def wis_dp_reference(weights: jnp.ndarray, pred: jnp.ndarray):
+    """(M,) weights, (M,) predecessor counts → (dp (M,), take (M,) bool)."""
+    m = weights.shape[0]
+
+    def step(dp, j):
+        with_j = weights[j] + dp[pred[j]]
+        without_j = dp[j]
+        take = with_j > without_j
+        dp = dp.at[j + 1].set(jnp.where(take, with_j, without_j))
+        return dp, take
+
+    dp0 = jnp.zeros((m + 1,), weights.dtype)
+    dp, take = jax.lax.scan(step, dp0, jnp.arange(m))
+    return dp[1:], take

@@ -1,0 +1,333 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count on first init); 512 placeholder host devices let jax.make_mesh build
+the production meshes.  No arrays are ever allocated — all inputs are
+sharded ShapeDtypeStructs.
+
+Per cell this prints/records:
+  * compiled.memory_analysis()  — per-device bytes (proves the cell fits)
+  * compiled.cost_analysis()    — per-device FLOPs / bytes for §Roofline
+  * collective bytes parsed from the optimized HLO
+and appends a JSON row to --out (incremental: reruns skip finished cells).
+
+Usage:
+  python -m repro.launch.dryrun --arch all --shape all --mesh both \
+      --out results/dryrun.jsonl
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCH_NAMES, SHAPES, get, input_specs
+from ..distributed.sharding import ShardingRules, resolve_param_specs
+from ..models.model import Model
+from ..training.optimizer import adafactor, adamw
+from ..training.schedule import warmup_cosine
+from ..training.trainer import make_accum_steps, make_train_step
+from .mesh import make_production_mesh, mesh_chips
+from .costmodel import analytic_cost
+from .roofline import Roofline, collective_bytes, model_flops
+
+__all__ = ["run_cell", "build_rules", "main"]
+
+
+def _fit_axes(batch: int, candidates, mesh) -> tuple:
+    """Largest candidate axis tuple whose extent divides the batch."""
+    for axes in candidates:
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if size and batch % size == 0:
+            return axes
+    return ()
+
+
+def build_rules(cfg, info, shape, mesh, *, multi_pod: bool,
+                overrides: Optional[dict] = None) -> ShardingRules:
+    fsdp = ("pod", "data") if multi_pod else ("data",)
+    full = fsdp + ("model",)
+    if info.pure_dp and shape.kind in ("train", "prefill"):
+        # tiny model: replicate params, batch over as much mesh as divides
+        batch_axes = _fit_axes(shape.batch, [full, fsdp, ("data",)], mesh)
+        kw = dict(mesh=mesh, fsdp_axes=(), model_axes=(),
+                  batch_axes=batch_axes, attn_shard=cfg.attn_shard,
+                  kv_heads_shardable=False, shard_kv_seq=False,
+                  shard_moe_expert=False)
+    else:
+        batch_axes = _fit_axes(shape.batch, [fsdp, ("data",)], mesh)
+        infer_repl = info.infer_replicate_fsdp and shape.kind != "train"
+        kw = dict(
+            mesh=mesh,
+            fsdp_axes=() if infer_repl else fsdp,
+            batch_axes=batch_axes,
+            seq_axes=(("model",) if (info.seq_shard_train and
+                                     shape.kind == "train") else ()),
+            attn_shard=cfg.attn_shard,
+            kv_heads_shardable=(cfg.n_kv_heads % cfg.model_axis_size == 0),
+            shard_kv_seq=(info.decode_shard_kv_seq and shape.kind == "decode"),
+            shard_moe_expert=(cfg.moe_shard == "expert"),
+        )
+    if overrides:
+        kw.update(overrides)
+    return ShardingRules(**kw)
+
+
+def _attach(tree_sds, spec_tree, mesh):
+    from jax.sharding import NamedSharding
+    return jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                           sharding=NamedSharding(mesh, sp)),
+        tree_sds, spec_tree)
+
+
+def _opt_spec_tree(opt_name: str, param_specs_resolved, param_sds):
+    """Optimizer-state PartitionSpecs mirroring the params."""
+    from jax.sharding import PartitionSpec as PS
+    if opt_name == "adamw":
+        return {"m": param_specs_resolved, "v": param_specs_resolved}
+
+    def fact(spec, sds):
+        if len(sds.shape) >= 2:
+            t = tuple(spec)
+            t = t + (None,) * (len(sds.shape) - len(t))
+            return {"vr": PS(*t[:-1]), "vc": PS(*(t[:-2] + t[-1:]))}
+        return {"v": PS(*tuple(spec))}
+
+    return {"stats": jax.tree.map(
+        fact, param_specs_resolved, param_sds,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))}
+
+
+def make_optimizer(name: str):
+    lr = warmup_cosine(3e-4, 200, 10000)
+    return adamw(lr) if name == "adamw" else adafactor(lr)
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               rule_overrides: Optional[dict] = None,
+               attn_impl: Optional[str] = None,
+               microbatch_override: Optional[int] = None):
+    cfg, info = get(arch)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not info.long_context:
+        return None  # recorded as an explicit skip by the caller
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = build_rules(cfg, info, shape, mesh, multi_pod=multi_pod,
+                        overrides=rule_overrides)
+    model = Model(cfg)
+    pspecs = resolve_param_specs(model.specs(), rules)
+    param_sds = _attach(
+        jax.eval_shape(model.init, jax.random.PRNGKey(0)), pspecs, mesh)
+    kv_dtype = (info.kv_cache_dtype if shape.kind == "decode" else None)
+    specs = input_specs(cfg, shape, rules, kv_dtype=kv_dtype)
+    impl = attn_impl or (
+        info.train_attn_impl if (shape.kind == "train" and
+                                 info.train_attn_impl != "auto")
+        else ("chunked" if shape.seq > 8192 else "auto"))
+
+    if shape.kind == "train":
+        opt = make_optimizer(info.optimizer)
+        mb = microbatch_override or info.microbatches.get(shape_name, 1)
+        # each microbatch must still cover the batch-sharded mesh rows
+        n_rows = 1
+        for a in rules.batch_axes:
+            n_rows *= mesh.shape[a]
+        if n_rows:
+            mb = max(1, min(mb, shape.batch // n_rows))
+        opt_sds = _attach(
+            jax.eval_shape(opt.init, param_sds),
+            _opt_spec_tree(info.optimizer, pspecs, param_sds), mesh)
+        accum_dtype = {"float32": jnp.float32,
+                       "bfloat16": jnp.bfloat16}[info.grad_accum_dtype]
+        if info.external_accum:
+            # production pattern for the giants: per-micro grad jit with a
+            # DONATED accumulator + a separate apply jit (see trainer.py)
+            micro_step, apply_step = make_accum_steps(
+                model, opt, rules=rules, attn_impl=impl, remat=True,
+                accum_dtype=accum_dtype, microbatches=mb)
+            grad_sds = _attach(
+                jax.tree.map(lambda p_: jax.ShapeDtypeStruct(
+                    p_.shape, accum_dtype), param_sds),
+                pspecs, mesh)
+            micro_specs = jax.tree.map(
+                lambda sds: jax.ShapeDtypeStruct(
+                    (shape.batch // mb,) + sds.shape[1:], sds.dtype,
+                    sharding=sds.sharding),
+                specs)
+            lowered = jax.jit(micro_step, donate_argnums=(1,)).lower(
+                param_sds, grad_sds, micro_specs)
+        else:
+            step_fn = make_train_step(model, opt, rules=rules, microbatches=mb,
+                                      attn_impl=impl, remat=True,
+                                      accum_dtype=accum_dtype)
+            # donate params + opt state (outputs alias inputs, as a real
+            # train loop would run it)
+            lowered = jax.jit(step_fn, donate_argnums=(0, 1)).lower(
+                param_sds, opt_sds, specs, jax.ShapeDtypeStruct((), jnp.int32))
+    elif shape.kind == "prefill":
+        def prefill_fn(params, batch):
+            return model.prefill(params, batch["tokens"],
+                                 memory=batch.get("memory"),
+                                 rules=rules, impl=impl)
+        lowered = jax.jit(prefill_fn).lower(param_sds, specs)
+    else:  # decode
+        def decode_fn(params, token, index, cache, cross_stack=None):
+            return model.decode_step(params, token, index, cache,
+                                     cross_stack=cross_stack,
+                                     rules=rules, impl=impl)
+        args = [param_sds, specs["token"], specs["index"], specs["cache"]]
+        if "cross_stack" in specs:
+            args.append(specs["cross_stack"])
+        # donate the cache: the serving loop aliases it in place
+        lowered = jax.jit(decode_fn, donate_argnums=(3,)).lower(*args)
+    return lowered, cfg, info, shape, mesh
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             rule_overrides: Optional[dict] = None,
+             attn_impl: Optional[str] = None,
+             microbatch_override: Optional[int] = None,
+             verbose: bool = True) -> Optional[dict]:
+    t0 = time.time()
+    out = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                     rule_overrides=rule_overrides, attn_impl=attn_impl,
+                     microbatch_override=microbatch_override)
+    if out is None:
+        row = {"arch": arch, "shape": shape_name,
+               "mesh": "multi" if multi_pod else "single",
+               "skipped": "full attention at 524k seq is quadratic "
+                          "(DESIGN §Arch-applicability)"}
+        if verbose:
+            print(f"[skip] {arch} × {shape_name}: {row['skipped']}")
+        return row
+    lowered, cfg, info, shape, mesh = out
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    chips = mesh_chips(mesh)
+    coll = collective_bytes(hlo, chips)
+    if shape.kind == "train" and info.external_accum:
+        # the lowered artifact is ONE micro-step; a full step runs M of them
+        rules_now = build_rules(cfg, info, shape, mesh,
+                                multi_pod=multi_pod, overrides=rule_overrides)
+        n_rows = 1
+        for a in rules_now.batch_axes:
+            n_rows *= mesh.shape[a]
+        m_base = microbatch_override or info.microbatches.get(shape_name, 1)
+        m_eff = max(1, min(m_base, shape.batch // max(n_rows, 1)))
+        coll.bytes_on_link *= m_eff
+        coll.by_kind = {k: v * m_eff for k, v in coll.by_kind.items()}
+    mem_stats = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+    }
+    # analytic FLOPs/bytes (implementation-accurate; see costmodel.py —
+    # cost_analysis undercounts while bodies, recorded raw as cross-check)
+    ac = analytic_cost(cfg, info, shape,
+                       attn_impl=(attn_impl or
+                                  ("chunked" if shape.seq > 8192 else "full")))
+    params_replicated = info.pure_dp and shape.kind in ("train", "prefill")
+    rl = Roofline(
+        arch=arch, shape=shape_name,
+        mesh="multi" if multi_pod else "single", chips=chips,
+        flops_per_device=ac.flops_global / chips,
+        bytes_per_device=ac.bytes_per_device(
+            chips, params_replicated=params_replicated),
+        collective=coll,
+        model_flops_global=model_flops(cfg, shape),
+        memory_stats=mem_stats,
+    )
+    row = rl.row()
+    row.update({"t_lower_s": round(t_lower, 1),
+                "t_compile_s": round(t_compile, 1),
+                "raw_cost_analysis": {
+                    "flops_per_device_body_once": float(cost.get("flops", 0.0)),
+                    "bytes_accessed_body_once": float(cost.get("bytes accessed", 0.0)),
+                },
+                "cost_detail": ac.detail})
+    if verbose:
+        dev_bytes = (mem_stats["argument_bytes"] or 0) + (mem_stats["temp_bytes"] or 0)
+        print(f"[ok] {arch} × {shape_name} × {row['mesh']}: "
+              f"mem/dev={dev_bytes/2**30:.2f}GiB "
+              f"flops/dev={row['flops_per_device']:.3e} "
+              f"t_comp={row['t_compute_s']*1e3:.2f}ms "
+              f"t_mem={row['t_memory_s']*1e3:.2f}ms "
+              f"t_coll={row['t_collective_s']*1e3:.2f}ms "
+              f"bottleneck={row['bottleneck']} "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        print(f"     memory_analysis: {mem}")
+    return row
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = ARCH_NAMES if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+                except Exception:
+                    pass
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                key = (arch, shape, "multi" if mp else "single")
+                if key in done:
+                    print(f"[cached] {key}")
+                    continue
+                try:
+                    row = run_cell(arch, shape, multi_pod=mp)
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((key, str(e)))
+                    row = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if mp else "single",
+                           "error": str(e)[:2000]}
+                if row is not None:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(row) + "\n")
+    if failures:
+        print(f"\n{len(failures)} FAILED cells:")
+        for k, e in failures:
+            print(" ", k, e[:200])
+        sys.exit(1)
+    print("\nall requested cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,259 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs            (197 TF bf16)
+    memory     = HLO_bytes_per_device / HBM_bw                (819 GB/s)
+    collective = collective_bytes_per_device / link_bw        (~50 GB/s)
+
+``cost_analysis()`` on the compiled executable reports PER-DEVICE flops and
+bytes (the post-SPMD module is the per-device program — verified against
+hand counts).  Collective bytes are parsed from the optimized HLO text:
+per-device link traffic per op, ring-algorithm accounting:
+
+    all-gather        out_bytes · (g−1)/g
+    reduce-scatter    in_bytes  · (g−1)/g      (= out·(g−1))
+    all-reduce        2 · bytes · (g−1)/g
+    all-to-all        bytes · (g−1)/g
+    collective-permute  bytes
+
+MODEL_FLOPS (global): 6·N·tokens for training (2 fwd + 4 bwd), 2·N_active·tokens
+for inference — attention FLOPs excluded by convention, so the reported
+MODEL/HLO ratio also exposes attention + dispatch overheads.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12  # bf16 / chip (v5e-class)
+HBM_BW = 819e9  # bytes/s / chip
+LINK_BW = 50e9  # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)"
+    r"\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return default
+
+
+@dataclass
+class CollectiveStats:
+    bytes_on_link: float = 0.0
+    by_kind: Dict[str, float] = field(default_factory=dict)
+    count: int = 0
+
+    def add(self, kind: str, b: float) -> None:
+        self.bytes_on_link += b
+        self.by_kind[kind] = self.by_kind.get(kind, 0.0) + b
+        self.count += 1
+
+
+def _op_link_bytes(kind: str, out_b: float, g: int) -> float:
+    frac = (g - 1) / g
+    if kind == "all-gather":
+        return out_b * frac
+    if kind == "all-reduce":
+        return 2.0 * out_b * frac
+    if kind == "reduce-scatter":
+        return out_b * (g - 1)  # in = out·g ; moved = in·(g−1)/g
+    if kind == "all-to-all":
+        return out_b * frac
+    if kind == "collective-permute":
+        return out_b
+    return 0.0
+
+
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^{]*)?\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _parse_computations(hlo_text: str):
+    """Split the module into computations; record collectives/whiles/consts."""
+    comps = {}
+    cur = None
+    entry = None
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        if cur is None:
+            m = _COMP_HEADER_RE.match(line)
+            if m and ("->" in line or line.startswith("ENTRY")):
+                cur = m.group(1)
+                comps[cur] = {"colls": [], "whiles": [], "consts": []}
+                if raw.startswith("ENTRY") or line.startswith("ENTRY"):
+                    entry = cur
+            continue
+        if line == "}" or line.startswith("}"):
+            cur = None
+            continue
+        mw = _WHILE_RE.search(line)
+        if mw:
+            comps[cur]["whiles"].append((mw.group(1), mw.group(2)))
+            continue
+        mc = _COLL_RE.search(line)
+        if mc:
+            out_shape, kind = mc.group(1), mc.group(2).replace("-start", "")
+            comps[cur]["colls"].append(
+                (kind, _shape_bytes(out_shape), _group_size(line, 0)))
+        for c in _CONST_RE.findall(line):
+            comps[cur]["consts"].append(int(c))
+    return comps, entry
+
+
+def _trip_count(comps, cond_name: str) -> int:
+    """Trip count ≈ largest plausible loop-bound constant in the condition."""
+    cond = comps.get(cond_name)
+    if not cond:
+        return 1
+    cands = [c for c in cond["consts"] if 1 < c < 10**7]
+    return max(cands) if cands else 1
+
+
+def collective_bytes(hlo_text: str, n_devices: int) -> CollectiveStats:
+    """Per-device link bytes over every collective, ×while-loop trip counts.
+
+    XLA prints each while body once; a collective inside the layer scan
+    (and inside the microbatch scan around it) executes trips× more often
+    than its single HLO occurrence.  We reconstruct the loop nest from the
+    condition/body references and multiply through.
+    """
+    comps, entry = _parse_computations(hlo_text)
+    stats = CollectiveStats()
+    if entry is None:
+        # fall back: flat scan over all lines
+        for comp in comps.values():
+            for kind, out_b, g in comp["colls"]:
+                g = g or n_devices
+                if g > 1:
+                    stats.add(kind, _op_link_bytes(kind, out_b, g))
+        return stats
+
+    seen = set()
+
+    def visit(name: str, mult: float):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        key = (name, mult)
+        if key in seen:  # guard against pathological recursion
+            return
+        seen.add(key)
+        for kind, out_b, g in comp["colls"]:
+            g = g or n_devices
+            if g > 1:
+                stats.add(kind, _op_link_bytes(kind, out_b, g) * mult)
+        for cond, body in comp["whiles"]:
+            trips = _trip_count(comps, cond)
+            visit(body, mult * trips)
+
+    visit(entry, 1.0)
+    return stats
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective: CollectiveStats
+    model_flops_global: float
+    memory_stats: Optional[dict] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective.bytes_on_link / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def model_vs_hlo(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs × chips): useful-compute fraction."""
+        total = self.flops_per_device * self.chips
+        return self.model_flops_global / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful model FLOP/s at the bound implied by the dominant term,
+        as a fraction of the cluster's peak FLOP/s."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        if t <= 0:
+            return 0.0
+        achieved = self.model_flops_global / t  # FLOP/s if bound-limited
+        return achieved / (self.chips * PEAK_FLOPS)
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective.bytes_on_link,
+            "collective_by_kind": self.collective.by_kind,
+            "n_collectives": self.collective.count,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops_global": self.model_flops_global,
+            "model_vs_hlo": self.model_vs_hlo,
+            "roofline_fraction": self.roofline_fraction,
+            "memory": self.memory_stats,
+        }
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·tokens (train) / 2·N_active·tokens (inference)."""
+    n = cfg.active_param_count()
+    tokens = shape.batch * (shape.seq if shape.kind in ("train", "prefill") else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens

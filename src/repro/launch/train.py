@@ -1,0 +1,94 @@
+"""Training launcher: run any registered arch (reduced or full scale) under
+the JASDA executor — the paper's interaction cycle drives the real run.
+
+CPU/dev:   python -m repro.launch.train --arch qwen3_14b --reduced --steps 50
+Cluster:   same entrypoint; the mesh/rules come from launch.mesh and the
+           sharded train step from training.trainer (see dryrun.py for the
+           exact jit construction used at production scale).
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from ..checkpoint import CheckpointStore
+from ..configs import get, reduced
+from ..core import JasdaScheduler, SliceSpec
+from ..core.executor import JasdaExecutor, TrainingJob
+from ..core.scheduler import SchedulerConfig
+from ..core.windows import WindowPolicy
+from ..data import DataConfig, SyntheticTokens
+from ..models import Model
+from ..training import adamw, adafactor, make_train_step, warmup_cosine
+
+GB = 1 << 30
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--no-jasda", action="store_true",
+                    help="plain loop without the scheduler executor")
+    args = ap.parse_args(argv)
+
+    cfg = reduced(args.arch) if args.reduced else get(args.arch)[0]
+    _, info = get(args.arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n_params/1e6:.1f}M params ({'reduced' if args.reduced else 'FULL'})")
+
+    lr = warmup_cosine(3e-4, min(50, args.steps // 4 + 1), args.steps)
+    opt = adamw(lr) if info.optimizer == "adamw" else adafactor(lr)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(model, opt))
+    data = SyntheticTokens(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq, global_batch=args.batch,
+        memory_seq=cfg.encoder_seq or cfg.vision_seq,
+        d_model=cfg.d_model if cfg.family in ("encdec", "vlm") else 0))
+    store = CheckpointStore(args.ckpt_dir or tempfile.mkdtemp(prefix="ckpt_"))
+    state = {"params": params, "opt": opt_state}
+    losses = []
+
+    def run_steps(s0, n):
+        loss = None
+        for i in range(s0, s0 + n):
+            batch = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+            state["params"], state["opt"], m = step_fn(
+                state["params"], state["opt"], batch, jnp.int32(i))
+            loss = float(m["loss"])
+            losses.append(loss)
+        return {"loss": loss}
+
+    if args.no_jasda:
+        run_steps(0, args.steps)
+    else:
+        sched = JasdaScheduler(
+            [SliceSpec("lane0", 8 * GB, n_chips=1)],
+            SchedulerConfig(window=WindowPolicy(horizon=3600.0, min_gap=0.3)))
+        ex = JasdaExecutor(sched)
+        job = TrainingJob(
+            job_id=cfg.name, total_steps=args.steps, step_fn=run_steps,
+            checkpoint_fn=lambda s: store.save(
+                s, {"params": state["params"], "opt": state["opt"]}),
+            param_bytes=n_params * 4.0, optimizer_bytes=n_params * 8.0,
+            activation_bytes=args.batch * args.seq * cfg.d_model * 16.0,
+            steps_per_sec=2.0)
+        ex.register(job)
+        ex.run(max_wall=86400.0)
+        store.wait()
+    print(f"done: loss {losses[0]:.3f} → {losses[-1]:.3f} "
+          f"({len(losses)} steps, checkpoints at {store.steps()})")
+
+
+if __name__ == "__main__":
+    main()

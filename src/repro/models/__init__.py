@@ -1,0 +1,4 @@
+"""Composable model zoo: dense / MoE / SSM / hybrid / enc-dec / VLM."""
+from .config import ModelConfig  # noqa: F401
+from .model import Model  # noqa: F401
+from .params import init_params, param_specs  # noqa: F401

@@ -1,0 +1,247 @@
+"""Core layer primitives (pure functions over param dicts).
+
+All functions take an optional ``rules`` (distributed.sharding.ShardingRules
+or None).  ``rules.act(x, kind)`` applies a with_sharding_constraint; with
+rules=None everything is unconstrained (CPU smoke tests).
+
+Attention implementations:
+  * ``full``     — materialized logits; fine for short seq / decode.
+  * ``chunked``  — lax.map over q chunks, full-T softmax per chunk; bounds
+                   transient memory to O(cq·T) — the GSPMD-safe flash
+                   equivalent used in the sharded dry-run.
+  * ``triangle`` — static python loop over q chunks with a growing causal
+                   k-extent: halves causal FLOPs at ~n_chunks× HLO size
+                   (hillclimb option).
+  * ``pallas``   — kernels/flash_attention (TPU executions only).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.flash_attention.ops import flash_attention
+
+__all__ = [
+    "rms_norm", "layer_norm", "rope", "attention", "mlp",
+    "softmax_cross_entropy", "constrain",
+]
+
+NEG_INF = -1e30
+
+
+def constrain(x, rules, kind: str):
+    return rules.act(x, kind) if rules is not None else x
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (half-rotation, llama convention)
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    b, s, h, hd = x.shape
+    half = hd // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )  # (half,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def _mask(q_pos, k_pos, causal, window):
+    """(B,S),(B,T) → (B,S,T) boolean visibility mask."""
+    b, s = q_pos.shape
+    t = k_pos.shape[1]
+    m = jnp.ones((b, s, t), dtype=bool)
+    if causal:
+        m = m & (k_pos[:, None, :] <= q_pos[:, :, None])
+    if window is not None:
+        m = m & (k_pos[:, None, :] > q_pos[:, :, None] - window)
+    return m
+
+
+def _sdpa_full(q, k, v, q_pos, k_pos, *, causal, window, scale, rules):
+    """q (B,S,H,hd), k/v (B,T,Hkv,hd) — GQA via head grouping."""
+    b, s, hq, hd = q.shape
+    _, t, hkv, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, s, hkv, g, hd)
+    logits = jnp.einsum(
+        "bskgd,btkd->bkgst", qg, k, preferred_element_type=jnp.float32
+    ) * scale  # (B, Hkv, g, S, T)
+    mask = _mask(q_pos, k_pos, causal, window)  # (B, S, T)
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out.reshape(b, s, hq, hd)
+
+
+def _sdpa_chunked(q, k, v, q_pos, k_pos, *, causal, window, scale, rules,
+                  chunk_q: int):
+    b, s, hq, hd = q.shape
+    n = max(1, s // chunk_q)
+    if s % chunk_q:
+        n, chunk_q = 1, s
+
+    def one(args):
+        qc, qpc = args
+        return _sdpa_full(qc, k, v, qpc, k_pos, causal=causal, window=window,
+                          scale=scale, rules=rules)
+
+    qs = q.reshape(b, n, chunk_q, hq, hd).swapaxes(0, 1)
+    qps = q_pos.reshape(b, n, chunk_q).swapaxes(0, 1)
+    out = jax.lax.map(one, (qs, qps))  # (n, B, cq, H, hd)
+    return out.swapaxes(0, 1).reshape(b, s, hq, hd)
+
+
+def _sdpa_triangle(q, k, v, q_pos, k_pos, *, causal, window, scale, rules,
+                   chunk_q: int):
+    """Static q-chunk loop; k extent grows with the chunk (causal-only)."""
+    b, s, hq, hd = q.shape
+    _, t, hkv, _ = k.shape
+    n = max(1, s // chunk_q)
+    if s % chunk_q:
+        return _sdpa_full(q, k, v, q_pos, k_pos, causal=causal, window=window,
+                          scale=scale, rules=rules)
+    outs = []
+    prefix = t - s  # cache prefix before q[0] (0 for self-attn training)
+    for i in range(n):
+        qc = q[:, i * chunk_q:(i + 1) * chunk_q]
+        qpc = q_pos[:, i * chunk_q:(i + 1) * chunk_q]
+        k_hi = prefix + (i + 1) * chunk_q
+        k_lo = 0
+        if window is not None:
+            k_lo = max(0, prefix + i * chunk_q - window + 1)
+            k_lo = (k_lo // chunk_q) * chunk_q  # align for layout stability
+        kc, vc = k[:, k_lo:k_hi], v[:, k_lo:k_hi]
+        kpc = k_pos[:, k_lo:k_hi]
+        outs.append(_sdpa_full(qc, kc, vc, qpc, kpc, causal=causal,
+                               window=window, scale=scale, rules=rules))
+    return jnp.concatenate(outs, axis=1)
+
+
+def attention(
+    q, k, v,
+    *,
+    q_positions,  # (B, S)
+    k_positions,  # (B, T)
+    causal: bool = True,
+    window: Optional[int] = None,
+    impl: str = "auto",
+    chunk_q: int = 256,  # bounds the (B,H,cq,T) logits transient
+    rules=None,
+    scale: Optional[float] = None,
+):
+    """Dispatching scaled-dot-product attention. Layouts: (B, S, H, hd)."""
+    b, s, hq, hd = q.shape
+    t = k.shape[1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(hd)
+    if impl == "auto":
+        impl = "full" if (s * t <= 4096 * 4096 or s == 1) else "chunked"
+    if impl == "pallas":
+        out = flash_attention(
+            q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+            causal=causal, window=window, scale=scale,
+            q_offset=t - s, impl="pallas",
+        ).swapaxes(1, 2)
+        return out
+    if impl == "full":
+        return _sdpa_full(q, k, v, q_positions, k_positions, causal=causal,
+                          window=window, scale=scale, rules=rules)
+    if impl == "chunked":
+        return _sdpa_chunked(q, k, v, q_positions, k_positions, causal=causal,
+                             window=window, scale=scale, rules=rules,
+                             chunk_q=chunk_q)
+    if impl == "triangle":
+        return _sdpa_triangle(q, k, v, q_positions, k_positions, causal=causal,
+                              window=window, scale=scale, rules=rules,
+                              chunk_q=chunk_q)
+    raise ValueError(f"unknown attention impl {impl}")
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def _act(x, kind: str):
+    return jax.nn.silu(x) if kind == "silu" else jax.nn.gelu(x)
+
+
+def mlp(x, p, *, gated: bool, act: str, rules=None):
+    """Gated (SwiGLU) or plain two-matrix FFN. x: (B, S, D)."""
+    if gated:
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        h = _act(g, act) * u
+    else:
+        h = _act(jnp.einsum("bsd,df->bsf", x, p["w_up"]) + p.get("b_up", 0.0), act)
+    h = constrain(h, rules, "btf")
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    if "b_down" in p:
+        out = out + p["b_down"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(logits, labels, *, real_vocab: int, rules=None):
+    """Mean CE over tokens; padded vocab entries are masked out.
+
+    logits: (B, S, Vp) in model dtype; computed in f32 via logsumexp.
+    labels: (B, S) int32 (−1 = ignore).
+    """
+    vp = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if real_vocab < vp:
+        pad_mask = jnp.arange(vp) >= real_vocab
+        logits = jnp.where(pad_mask, NEG_INF, logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    nll = lse - gold
+    valid = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1.0)

@@ -1,0 +1,574 @@
+"""Model assembly: one Model class covering all families.
+
+Execution paths:
+  * ``forward``      — full-sequence logits (training / eval).
+  * ``prefill``      — full sequence, returns last-position logits + cache.
+  * ``decode_step``  — one token against a cache (serving inner loop).
+
+Depth is handled by lax.scan over stacked superblocks (O(1) HLO in depth)
+with optional jax.checkpoint (remat) around each superblock.  Caches are
+pytrees with a leading superblock axis, scanned alongside the params.
+
+Attention caches:
+  * dense/enc-dec/vlm self-attn — linear cache (B, Tmax, Hkv, hd), written
+    at ``index`` via dynamic_update_slice.
+  * hybrid local-attn — RING cache of size ``window`` with per-slot
+    positions (stale slots overwritten; masking uses stored positions, so
+    causal+window semantics hold for any index).
+  * mamba / rglru — O(1) recurrent state (conv tail + ssm/lru state).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (attention, constrain, layer_norm, mlp, rms_norm, rope,
+                     softmax_cross_entropy)
+from .moe import moe_ffn
+from .params import init_params, param_specs
+from .rglru import rglru_decode_step, rglru_seq
+from .ssm import mamba_decode_step, mamba_seq
+
+__all__ = ["Model"]
+
+
+def _norm(cfg, x, p, name):
+    if cfg.family == "encdec":
+        return layer_norm(x, p[f"{name}_scale"], p[f"{name}_bias"], cfg.norm_eps)
+    return rms_norm(x, p[f"{name}_scale"], cfg.norm_eps)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key):
+        return init_params(self.cfg, key)
+
+    def specs(self):
+        return param_specs(self.cfg)
+
+    # =========================================================================
+    # attention building blocks (single layer; leading L stripped by scan)
+    # =========================================================================
+    def _project_qkv(self, p, hq, hkv=None):
+        cfg = self.cfg
+        src = hkv if hkv is not None else hq
+        q = jnp.einsum("bsd,dhk->bshk", hq, p["wq"])
+        k = jnp.einsum("btd,dhk->bthk", src, p["wk"])
+        v = jnp.einsum("btd,dhk->bthk", src, p["wv"])
+        if cfg.qkv_bias:
+            q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+        return q, k, v
+
+    def _attn_out(self, p, out):
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+    def _self_attn(self, p, h, positions, *, cache=None, index=None,
+                   causal=True, window=None, rules=None, impl="auto"):
+        """Returns (attn_out, new_cache or None)."""
+        cfg = self.cfg
+        q, k, v = self._project_qkv(p, h)
+        q = constrain(q, rules, "bshk")
+        k = constrain(k, rules, "btkk")
+        v = constrain(v, rules, "btkk")
+        use_rope = cfg.family != "encdec"
+        if use_rope:
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+
+        new_cache = None
+        k_pos = positions
+        if cache is not None and "slot_pos" in cache:
+            # ring cache (windowed local attention)
+            w = cache["k"].shape[1]
+            s = k.shape[1]
+            if s > w:  # prefill longer than the window: keep the last w
+                k_w, v_w, pos_w = k[:, -w:], v[:, -w:], positions[:, -w:]
+            else:
+                k_w, v_w, pos_w = k, v, positions
+            slots = pos_w % w
+            upd = jax.vmap(lambda c, sl, val: c.at[sl].set(val))
+            ck = upd(cache["k"], slots, k_w.astype(cache["k"].dtype))
+            cv = upd(cache["v"], slots, v_w.astype(cache["v"].dtype))
+            cp = upd(cache["slot_pos"], slots, pos_w)
+            new_cache = {"k": ck, "v": cv, "slot_pos": cp}
+            if h.shape[1] == 1:  # decode reads from the ring
+                k, v, k_pos = ck, cv, cp
+            # prefill: attend over the in-flight full k/v (already causal+win)
+        elif cache is not None:
+            # linear cache: prefill writes a block at scalar `index`; decode
+            # (S == 1) writes per-batch rows at a (B,) index vector so
+            # continuous batching can hold slots at different depths.
+            if k.shape[1] == 1 and getattr(index, "ndim", 0) == 1:
+                upd = jax.vmap(lambda c, i, val: jax.lax.dynamic_update_slice_in_dim(
+                    c, val, i, axis=0))
+                ck = upd(cache["k"], index, k.astype(cache["k"].dtype))
+                cv = upd(cache["v"], index, v.astype(cache["v"].dtype))
+            else:
+                ck = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k.astype(cache["k"].dtype), index, axis=1)
+                cv = jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v.astype(cache["v"].dtype), index, axis=1)
+            new_cache = {"k": ck, "v": cv}
+            if h.shape[1] == 1 or index is not None:
+                t = ck.shape[1]
+                k, v = ck, cv
+                if k.dtype != cfg.dtype:  # low-precision cache (e.g. f8)
+                    k, v = k.astype(cfg.dtype), v.astype(cfg.dtype)
+                k_pos = jnp.broadcast_to(jnp.arange(t), (h.shape[0], t))
+            k = constrain(k, rules, "btkk")
+            v = constrain(v, rules, "btkk")
+
+        # Ulysses-style context parallelism for headdim-sharded archs
+        # (head counts not divisible by the model axis): all-to-all the
+        # queries from hd-sharded to seq-sharded/full-head layout so the
+        # softmax needs no partial-sum all-reduce; k/v gather fully (GQA
+        # keeps them small).  Decode (S == 1) keeps the psum path.
+        ulysses = (rules is not None and rules.attn_shard == "headdim"
+                   and q.shape[1] > 1)
+        if ulysses:
+            q = constrain(q, rules, "bshk_seq")
+            k = constrain(k, rules, "btkk_full")
+            v = constrain(v, rules, "btkk_full")
+        out = attention(
+            q, k, v, q_positions=positions, k_positions=k_pos,
+            causal=causal, window=window, impl=impl, rules=rules)
+        if ulysses:
+            out = constrain(out, rules, "bshk_seq")
+        out = constrain(out, rules, "bshk")
+        return self._attn_out(p, out), new_cache
+
+    def _cross_attn(self, p, h, cross_kv, rules=None, impl="auto"):
+        q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+        if self.cfg.qkv_bias:
+            q = q + p["bq"]
+        k, v = cross_kv["k"], cross_kv["v"]
+        b, s, t = h.shape[0], h.shape[1], k.shape[1]
+        out = attention(
+            q, k, v,
+            q_positions=jnp.zeros((b, s), jnp.int32),
+            k_positions=jnp.zeros((b, t), jnp.int32),
+            causal=False, impl=impl, rules=rules)
+        return self._attn_out(p, out)
+
+    def _mlp_res(self, p, x, rules, gate=None):
+        cfg = self.cfg
+        h = _norm(cfg, x, p, "ln2")
+        out = mlp(h, p["mlp"], gated=cfg.gated_mlp, act=cfg.act, rules=rules)
+        if gate is not None:
+            out = (out * jnp.tanh(gate)).astype(x.dtype)
+        return x + constrain(out, rules, "btd")
+
+    # =========================================================================
+    # one block of a given kind
+    # =========================================================================
+    def _apply_block(self, kind, p, x, positions, *, cache=None, index=None,
+                     cross_kv=None, rules=None, impl="auto",
+                     aux=None, decode=False):
+        cfg = self.cfg
+        new_cache = None
+        if kind in ("attn", "moe"):
+            h = _norm(cfg, x, p, "ln1")
+            window = cfg.window if cfg.family == "hybrid" else None
+            out, new_cache = self._self_attn(
+                p["attn"], h, positions, cache=cache, index=index,
+                causal=True, window=window, rules=rules, impl=impl)
+            x = x + constrain(out, rules, "btd")
+            if kind == "attn":
+                x = self._mlp_res(p, x, rules)
+            else:
+                h2 = _norm(cfg, x, p, "ln2")
+                moe_out, aux_l = moe_ffn(
+                    h2, p["moe"], top_k=cfg.top_k,
+                    capacity_factor=cfg.capacity_factor,
+                    act=cfg.act, gated=cfg.gated_mlp, rules=rules)
+                x = x + constrain(moe_out, rules, "btd")
+                if aux is not None:
+                    aux = aux + aux_l
+        elif kind == "cross":
+            h = _norm(cfg, x, p, "ln1")
+            out = self._cross_attn(p["attn"], h, cross_kv, rules=rules, impl=impl)
+            gated = (out * jnp.tanh(p["attn"]["gate_attn"])).astype(x.dtype)
+            x = x + constrain(gated, rules, "btd")
+            x = self._mlp_res(p, x, rules, gate=p["gate_mlp"])
+        elif kind == "mamba":
+            h = _norm(cfg, x, p, "ln1")
+            if decode:
+                out, new_cache = mamba_decode_step(
+                    h[:, 0], p["mamba"], cfg, cache, rules=rules)
+                out = out[:, None]
+            elif cache is not None:  # prefill: also emit the decode state
+                out, new_cache = mamba_seq(h, p["mamba"], cfg, rules=rules,
+                                           return_cache=True)
+            else:
+                out = mamba_seq(h, p["mamba"], cfg, rules=rules)
+            x = x + constrain(out, rules, "btd")
+        elif kind == "rglru":
+            h = _norm(cfg, x, p, "ln1")
+            if decode:
+                out, new_cache = rglru_decode_step(
+                    h[:, 0], p["rglru"], cfg, cache, rules=rules)
+                out = out[:, None]
+            elif cache is not None:  # prefill: also emit the decode state
+                out, new_cache = rglru_seq(h, p["rglru"], cfg, rules=rules,
+                                           return_cache=True)
+            else:
+                out = rglru_seq(h, p["rglru"], cfg, rules=rules)
+            x = x + constrain(out, rules, "btd")
+            x = self._mlp_res(p, x, rules)
+        else:
+            raise ValueError(kind)
+        return x, new_cache, aux
+
+    # =========================================================================
+    # superblock stack (scan over depth)
+    # =========================================================================
+    def _run_stack(self, stack_params, x, positions, *, kinds, cache=None,
+                   index=None, cross_kv_stack=None, rules=None, impl="auto",
+                   decode=False, remat=True):
+        use_cache = cache is not None
+        use_cross = cross_kv_stack is not None
+
+        def superblock(x, p_sb, cache_sb, cross_sb):
+            # opaque barrier: stops XLA hoisting convert(saved-stack-slice)
+            # out of the backward loop as a whole-stack f32 copy (a CPU-LICM
+            # space/time trade that doubles remat-save memory)
+            x = jax.lax.optimization_barrier(x)
+            new_caches = {}
+            aux = jnp.zeros((), jnp.float32)
+            for i, kind in enumerate(kinds):
+                name = f"b{i}_{kind}"
+                c = cache_sb.get(name) if cache_sb else None
+                ckv = cross_sb if kind == "cross" else None
+                x, nc, aux = self._apply_block(
+                    kind, p_sb[name], x, positions, cache=c, index=index,
+                    cross_kv=ckv, rules=rules, impl=impl, aux=aux,
+                    decode=decode)
+                if nc is not None:
+                    new_caches[name] = nc
+            x = constrain(x, rules, "btd")
+            return x, new_caches, aux
+
+        if remat:
+            superblock = jax.checkpoint(
+                superblock, policy=jax.checkpoint_policies.nothing_saveable,
+                static_argnums=())
+
+        def body(x, layer):
+            p_sb = layer[0]
+            i = 1
+            cache_sb = None
+            cross_sb = None
+            if use_cache:
+                cache_sb = layer[i]; i += 1
+            if use_cross:
+                cross_sb = layer[i]; i += 1
+            x, ncache, aux = superblock(x, p_sb, cache_sb, cross_sb)
+            return x, (ncache, aux)
+
+        xs: Tuple = (stack_params,)
+        if use_cache:
+            xs = xs + (cache,)
+        if use_cross:
+            xs = xs + (cross_kv_stack,)
+        x, (new_cache, auxs) = jax.lax.scan(body, x, xs)
+        return x, (new_cache if use_cache or not decode else None), jnp.sum(auxs)
+
+    def _run_tail(self, tail_params, x, positions, *, cache=None, index=None,
+                  rules=None, impl="auto", decode=False):
+        """Remainder layers (hybrid: 38 % 3 = 2): single-layer stacks."""
+        cfg = self.cfg
+        new_caches = {}
+        for i, kind in enumerate(cfg.superblock[: cfg.n_tail]):
+            name = f"t{i}_{kind}"
+            p = jax.tree.map(lambda a: a[0], tail_params[name])
+            c = jax.tree.map(lambda a: a[0], cache[name]) if cache else None
+            x, nc, _ = self._apply_block(
+                kind, p, x, positions, cache=c, index=index, rules=rules,
+                impl=impl, decode=decode)
+            if nc is not None:
+                new_caches[name] = jax.tree.map(lambda a: a[None], nc)
+        return x, new_caches
+
+    # =========================================================================
+    # embedding / head
+    # =========================================================================
+    def embed(self, params, tokens, positions):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+        if "pos_embed" in params:  # whisper decoder: learned/sinusoidal table
+            x = x + jnp.take(params["pos_embed"], positions, axis=0).astype(cfg.dtype)
+        return x
+
+    def unembed(self, params, x, rules=None):
+        if self.cfg.tie_embeddings:
+            logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+        else:
+            logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+        return constrain(logits, rules, "btv")
+
+    def _final_norm(self, params, x):
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return layer_norm(x, params["final_norm"], params["final_norm_bias"],
+                              cfg.norm_eps)
+        return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    # =========================================================================
+    # encoder / cross-attention memory
+    # =========================================================================
+    def encode(self, params, frames, rules=None, impl="auto", remat=True):
+        cfg = self.cfg
+        enc = params["encoder"]
+        x = frames.astype(cfg.dtype) + \
+            enc["pos_embed"][None, : frames.shape[1]].astype(cfg.dtype)
+        b, t, _ = x.shape
+        pos = jnp.broadcast_to(jnp.arange(t), (b, t))
+
+        def body(x, p):
+            h = _norm(cfg, x, p, "ln1")
+            out, _ = self._self_attn(p["attn"], h, pos, causal=False,
+                                     rules=rules, impl=impl)
+            x = x + out
+            x = self._mlp_res(p, x, rules)
+            return x, None
+
+        if remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, _ = jax.lax.scan(body, x, enc["blocks"])
+        return layer_norm(x, enc["final_norm"], enc["final_norm_bias"],
+                          cfg.norm_eps)
+
+    def cross_kv(self, params, memory, rules=None):
+        """Precompute cross-attn K/V: {"k","v"} stacked (L_cross, B, T, Hkv, hd)."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            stack = params["cross"]["attn"]
+        else:  # vlm
+            idx = len(cfg.superblock) - 1
+            stack = params["blocks"][f"b{idx}_cross"]["attn"]
+
+        def one(wk, wv, bk, bv):
+            k = jnp.einsum("btd,dhk->bthk", memory, wk)
+            v = jnp.einsum("btd,dhk->bthk", memory, wv)
+            if bk is not None:
+                k, v = k + bk, v + bv
+            return {"k": k, "v": v}
+
+        if cfg.qkv_bias:
+            out = jax.vmap(one)(stack["wk"], stack["wv"], stack["bk"], stack["bv"])
+        else:
+            out = jax.vmap(lambda a, b: one(a, b, None, None))(stack["wk"], stack["wv"])
+        return {k: constrain(v, rules, "xbtkk") for k, v in out.items()}
+
+    # =========================================================================
+    # full forward (training / eval)
+    # =========================================================================
+    def forward(self, params, tokens, *, memory=None, rules=None,
+                impl="auto", remat=True, positions=None):
+        cfg = self.cfg
+        b, s = tokens.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        x = self.embed(params, tokens, positions)
+        x = constrain(x, rules, "btd")
+
+        aux = jnp.zeros((), jnp.float32)
+        if cfg.family == "encdec":
+            enc_out = self.encode(params, memory, rules=rules, impl=impl,
+                                  remat=remat)
+            cross_stack = self.cross_kv(params, enc_out, rules=rules)
+            x, _ = self._run_encdec_decoder(
+                params, x, positions, cross_stack, rules=rules, impl=impl,
+                remat=remat, cache=None, index=None)
+        else:
+            cross_stack = None
+            if cfg.family == "vlm":
+                cross_stack = self.cross_kv(params, memory.astype(cfg.dtype),
+                                            rules=rules)
+            x, _, aux = self._run_stack(
+                params["blocks"], x, positions, kinds=cfg.superblock,
+                cross_kv_stack=cross_stack, rules=rules, impl=impl,
+                remat=remat)
+            if "tail" in params:
+                x, _ = self._run_tail(params["tail"], x, positions,
+                                      rules=rules, impl=impl)
+        x = self._final_norm(params, x)
+        return self.unembed(params, x, rules), aux
+
+    def _run_encdec_decoder(self, params, x, positions, cross_stack, *,
+                            rules, impl, remat=True, cache=None, index=None,
+                            decode=False):
+        cfg = self.cfg
+        use_cache = cache is not None
+
+        def layer(x, p_self, p_cross, ckv, c):
+            h = _norm(cfg, x, p_self, "ln1")
+            out, nc = self._self_attn(p_self["attn"], h, positions,
+                                      cache=c, index=index, causal=True,
+                                      rules=rules, impl=impl)
+            x = x + out
+            hx = _norm(cfg, x, p_cross, "lnx")
+            x = x + self._cross_attn(p_cross["attn"], hx, ckv, rules=rules,
+                                     impl=impl)
+            x = self._mlp_res(p_self, x, rules)
+            return x, nc
+
+        if remat:
+            layer = jax.checkpoint(
+                layer, policy=jax.checkpoint_policies.nothing_saveable)
+
+        blocks = params["blocks"]["b0_attn"]
+        cross_p = {"lnx_scale": params["cross"]["lnx_scale"],
+                   "lnx_bias": params["cross"]["lnx_bias"],
+                   "attn": params["cross"]["attn"]}
+
+        def body(x, xs):
+            if use_cache:
+                p_self, p_cross, ckv, c = xs
+            else:
+                p_self, p_cross, ckv = xs
+                c = None
+            return layer(x, p_self, p_cross, ckv, c)
+
+        xs = (blocks, cross_p, cross_stack) + ((cache,) if use_cache else ())
+        x, new_cache = jax.lax.scan(body, x, xs)
+        return x, (new_cache if use_cache else None)
+
+    # =========================================================================
+    # loss
+    # =========================================================================
+    def loss_fn(self, params, batch, *, rules=None, impl="auto", remat=True):
+        cfg = self.cfg
+        logits, aux = self.forward(
+            params, batch["tokens"], memory=batch.get("memory"),
+            rules=rules, impl=impl, remat=remat)
+        loss = softmax_cross_entropy(
+            logits, batch["labels"], real_vocab=cfg.vocab_size, rules=rules)
+        if cfg.family == "moe":
+            loss = loss + cfg.router_aux_weight * aux
+        return loss
+
+    # =========================================================================
+    # serving
+    # =========================================================================
+    def init_cache(self, batch: int, max_seq: int, dtype=None) -> Dict[str, Any]:
+        cfg = self.cfg
+        if isinstance(dtype, str):
+            dtype = jnp.dtype(dtype)
+        dtype = dtype or cfg.dtype
+        L = cfg.n_super
+
+        def sub(kind, n):
+            if kind in ("attn", "moe"):
+                t = min(cfg.window, max_seq) if cfg.family == "hybrid" else max_seq
+                c = {"k": jnp.zeros((n, batch, t, cfg.n_kv_heads, cfg.hd), dtype),
+                     "v": jnp.zeros((n, batch, t, cfg.n_kv_heads, cfg.hd), dtype)}
+                if cfg.family == "hybrid":
+                    c["slot_pos"] = jnp.full((n, batch, t), -(10**9), jnp.int32)
+                return c
+            if kind == "mamba":
+                return {"conv": jnp.zeros((n, batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+                        "ssm": jnp.zeros((n, batch, cfg.d_inner, cfg.ssm_state), jnp.float32)}
+            if kind == "rglru":
+                return {"conv": jnp.zeros((n, batch, cfg.ssm_conv - 1, cfg.lru_dim), dtype),
+                        "h": jnp.zeros((n, batch, cfg.lru_dim), jnp.float32)}
+            if kind == "cross":
+                return None  # handled via cross_stack
+            raise ValueError(kind)
+
+        blocks = {}
+        for i, kind in enumerate(cfg.superblock):
+            c = sub(kind, L)
+            if c is not None:
+                blocks[f"b{i}_{kind}"] = c
+        cache = {"blocks": blocks}
+        if cfg.n_tail:
+            cache["tail"] = {
+                f"t{i}_{kind}": sub(kind, 1)
+                for i, kind in enumerate(cfg.superblock[: cfg.n_tail])
+            }
+        return cache
+
+    def decode_step(self, params, token, index, cache, *, cross_stack=None,
+                    rules=None, impl="auto"):
+        """token (B,), index scalar or (B,) → (logits (B, Vp), new cache)."""
+        cfg = self.cfg
+        b = token.shape[0]
+        index = jnp.asarray(index, jnp.int32)
+        if index.ndim == 0:
+            positions = jnp.broadcast_to(index, (b, 1)).astype(jnp.int32)
+        else:
+            positions = index[:, None]
+        x = self.embed(params, token[:, None], positions)
+        x = constrain(x, rules, "btd")
+
+        if cfg.family == "encdec":
+            x, new_blocks = self._run_encdec_decoder(
+                params, x, positions, cross_stack, rules=rules, impl=impl,
+                remat=False, cache=cache["blocks"]["b0_attn"], index=index,
+                decode=True)
+            new_cache = {"blocks": {"b0_attn": new_blocks}}
+        else:
+            x, new_blocks, _ = self._run_stack(
+                params["blocks"], x, positions, kinds=cfg.superblock,
+                cache=cache["blocks"], index=index,
+                cross_kv_stack=cross_stack, rules=rules, impl=impl,
+                decode=True, remat=False)
+            new_cache = {"blocks": new_blocks}
+            if "tail" in params:
+                x, new_tail = self._run_tail(
+                    params["tail"], x, positions, cache=cache.get("tail"),
+                    index=index, rules=rules, impl=impl, decode=True)
+                new_cache["tail"] = new_tail
+        x = self._final_norm(params, x)
+        logits = self.unembed(params, x, rules)
+        return logits[:, 0], new_cache
+
+    def prefill(self, params, tokens, *, memory=None, rules=None, impl="auto",
+                max_seq=None):
+        """Run the prompt; returns (last logits, cache, cross_stack).
+
+        ``max_seq`` sizes the cache for subsequent decode steps (≥ prompt).
+        """
+        cfg = self.cfg
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        x = self.embed(params, tokens, positions)
+        x = constrain(x, rules, "btd")
+        cache0 = self.init_cache(b, max_seq or s)
+
+        cross_stack = None
+        if cfg.family == "encdec":
+            enc_out = self.encode(params, memory, rules=rules, impl=impl,
+                                  remat=False)
+            cross_stack = self.cross_kv(params, enc_out, rules=rules)
+            x, new_blocks = self._run_encdec_decoder(
+                params, x, positions, cross_stack, rules=rules, impl=impl,
+                remat=False, cache=cache0["blocks"]["b0_attn"], index=0)
+            cache = {"blocks": {"b0_attn": new_blocks}}
+        else:
+            if cfg.family == "vlm":
+                cross_stack = self.cross_kv(params, memory.astype(cfg.dtype),
+                                            rules=rules)
+            x, new_blocks, _ = self._run_stack(
+                params["blocks"], x, positions, kinds=cfg.superblock,
+                cache=cache0["blocks"], index=0, cross_kv_stack=cross_stack,
+                rules=rules, impl=impl, remat=False)
+            cache = {"blocks": new_blocks}
+            if "tail" in params:
+                x, new_tail = self._run_tail(
+                    params["tail"], x, positions, cache=cache0.get("tail"),
+                    index=0, rules=rules, impl=impl)
+                cache["tail"] = new_tail
+        x = self._final_norm(params, x)
+        logits = self.unembed(params, x[:, -1:], rules)
+        return logits[:, 0], cache, cross_stack

@@ -1,0 +1,103 @@
+"""Mixture-of-Experts FFN: GShard-style grouped capacity dispatch.
+
+Top-k routing with capacity bound per group (dropped tokens pass through
+the residual).  The dispatch/combine tensors are one-hot products expressed
+as einsums — the formulation GSPMD understands natively, so expert
+parallelism over the "model" axis lowers to the canonical all-to-all-free
+dispatch (the dispatch einsum contracts the sharded token dim against the
+expert-sharded weight dim; XLA inserts the minimal collectives).
+
+Group size bounds the transient dispatch tensor to
+(G, g, E, C) with C = g·k/E·cf — set ``group_size`` so this stays ≲ tens of
+MB per device.  A shard_map all-to-all path is the §Perf alternative.
+
+Aux load-balancing loss (Switch-style): E·Σ_e f_e·p_e over the pre-capacity
+router distribution.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import constrain
+
+__all__ = ["moe_ffn"]
+
+
+def moe_ffn(
+    x: jnp.ndarray,  # (B, S, D)
+    p,  # params: router (D,E), w_gate/w_up (E,D,Fe), w_down (E,Fe,D)
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    group_size: int = 512,
+    act: str = "silu",
+    gated: bool = True,
+    rules=None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    B, S, D = x.shape
+    E = p["router"].shape[-1]
+    g = min(group_size, S)
+    assert S % g == 0, "seq must divide into router groups"
+    n_groups = B * (S // g)
+    xt = x.reshape(n_groups, g, D)
+
+    # --- routing -----------------------------------------------------------
+    logits = jnp.einsum(
+        "gsd,de->gse", xt.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)  # (G, g, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, top_k)  # (G, g, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # aux loss on the pre-capacity distribution (Switch/GShard)
+    me = jnp.mean(probs, axis=(0, 1))  # (E,)
+    one_hot_top1 = jax.nn.one_hot(expert_idx[..., 0], E, dtype=jnp.float32)
+    ce = jnp.mean(one_hot_top1, axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    # --- capacity assignment -------------------------------------------------
+    cap = int(g * top_k / E * capacity_factor) + 1
+    assign = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)  # (G, g, k, E)
+    # priority order: k-slot-major then token order (GShard convention)
+    flat = assign.transpose(0, 2, 1, 3).reshape(n_groups, g * top_k, E)
+    pos = jnp.cumsum(flat, axis=1) - 1  # (G, g·k, E) position in expert
+    pos = pos.transpose(0, 2, 1).reshape(n_groups, E, top_k, g).transpose(0, 3, 2, 1)
+    # pos[g_, s, k_, e]: this token's slot in expert e for its k_-th choice
+    slot = jnp.sum(pos * assign, axis=-1)  # (G, g, k)
+    keep = slot < cap
+
+    # dispatch (G, g, E, C) = one_hot(expert) × one_hot(slot) × keep
+    disp = (
+        assign.astype(jnp.bfloat16)[..., None]
+        * jax.nn.one_hot(slot, cap, dtype=jnp.bfloat16)[..., None, :]
+        * keep.astype(jnp.bfloat16)[..., None, None]
+    ).sum(axis=2)  # sum over k → (G, g, E, C)
+    combine = (
+        assign.astype(jnp.float32)
+        * gate_vals[..., None]
+        * keep.astype(jnp.float32)[..., None]
+    )  # (G, g, k, E)
+    comb = (
+        combine.astype(jnp.bfloat16)[..., None]
+        * jax.nn.one_hot(slot, cap, dtype=jnp.bfloat16)[..., None, :]
+    ).sum(axis=2)  # (G, g, E, C)
+
+    # --- expert computation ---------------------------------------------------
+    ein = jnp.einsum("gsec,gsd->gecd", disp, xt)  # (G, E, C, D)
+    ein = constrain(ein, rules, "gecd")
+    if gated:
+        hg = jnp.einsum("gecd,edf->gecf", ein, p["w_gate"])
+        hu = jnp.einsum("gecd,edf->gecf", ein, p["w_up"])
+        h = (jax.nn.silu(hg) if act == "silu" else jax.nn.gelu(hg)) * hu
+    else:
+        h = jnp.einsum("gecd,edf->gecf", ein, p["w_up"])
+        h = jax.nn.silu(h) if act == "silu" else jax.nn.gelu(h)
+    h = constrain(h, rules, "gecf")
+    out_e = jnp.einsum("gecf,efd->gecd", h, p["w_down"])  # (G, E, C, D)
+    out = jnp.einsum("gsec,gecd->gsd", comb, out_e)  # (G, g, D)
+    return out.reshape(B, S, D).astype(x.dtype), aux.astype(jnp.float32)

@@ -1,0 +1,89 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+    r_t = σ(blockdiag(W_r) x_t + b_r)          recurrence gate
+    i_t = σ(blockdiag(W_i) x_t + b_i)          input gate
+    a_t = a^(c·r_t),  a = σ(Λ),  c = 8
+    h_t = a_t ⊙ h_{t-1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+The sequence path reuses kernels/linear_scan; decode is the O(1) update.
+The full temporal-mixing block is: in_x branch → conv1d(K) → RG-LRU,
+gated by gelu(in_gate branch), then out-projected (Griffin figure 2).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.linear_scan.ops import linear_scan
+from .layers import constrain
+from .ssm import causal_conv1d, conv_step
+
+__all__ = ["rglru_seq", "rglru_decode_step"]
+
+_C = 8.0
+
+
+def _gates(x, p):
+    """Block-diagonal gate projections. x (..., Dr) → r, i (..., Dr)."""
+    nb, bs, _ = p["gate_r"].shape
+    xb = x.reshape(x.shape[:-1] + (nb, bs)).astype(jnp.float32)
+    r = jnp.einsum("...nb,nbc->...nc", xb, p["gate_r"].astype(jnp.float32))
+    i = jnp.einsum("...nb,nbc->...nc", xb, p["gate_i"].astype(jnp.float32))
+    r = r.reshape(x.shape) + p["gate_r_b"]
+    i = i.reshape(x.shape) + p["gate_i_b"]
+    return jax.nn.sigmoid(r), jax.nn.sigmoid(i)
+
+
+def _log_a(p):
+    # log a = log σ(Λ) = -softplus(-Λ)
+    return -jax.nn.softplus(-p["lam"].astype(jnp.float32))
+
+
+def rglru_seq(x: jnp.ndarray, p: Dict, cfg, *, rules=None,
+              scan_impl: Optional[str] = None, return_cache: bool = False):
+    """x (B,S,D) → (B,S,D): conv + RG-LRU branch × gelu gate branch."""
+    B, S, _ = x.shape
+    K = cfg.ssm_conv
+    xr_raw = jnp.einsum("bsd,dm->bsm", x, p["in_x"])  # (B,S,Dr)
+    xg = jnp.einsum("bsd,dm->bsm", x, p["in_gate"])
+    xr_raw = constrain(xr_raw, rules, "btm")
+    xr = causal_conv1d(xr_raw, p["conv_w"], p["conv_b"])
+
+    r, i = _gates(xr, p)
+    log_a_t = _C * r * _log_a(p)  # (B,S,Dr), ≤ 0
+    a_t = jnp.exp(log_a_t)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a_t), 1e-12)) \
+        * i * xr.astype(jnp.float32)
+    h, hT = linear_scan(a_t, gated_in, impl=scan_impl)
+    y = (h * jax.nn.gelu(xg.astype(jnp.float32))).astype(x.dtype)
+    y = constrain(y, rules, "btm")
+    out = jnp.einsum("bsm,md->bsd", y, p["out_proj"])
+    if not return_cache:
+        return out
+    pad = jnp.zeros((B, K - 1, xr_raw.shape[-1]), xr_raw.dtype)
+    conv_tail = jnp.concatenate([pad, xr_raw], axis=1)[:, -(K - 1):]
+    return out, {"conv": conv_tail, "h": hT.astype(jnp.float32)}
+
+
+def rglru_decode_step(
+    x_t: jnp.ndarray,  # (B, D)
+    p: Dict,
+    cfg,
+    cache: Dict,  # {"conv": (B,K-1,Dr), "h": (B,Dr) f32}
+    *,
+    rules=None,
+) -> Tuple[jnp.ndarray, Dict]:
+    xr = jnp.einsum("bd,dm->bm", x_t, p["in_x"])
+    xg = jnp.einsum("bd,dm->bm", x_t, p["in_gate"])
+    xc, new_conv = conv_step(xr, p["conv_w"], p["conv_b"], cache["conv"])
+
+    r, i = _gates(xc, p)
+    log_a_t = _C * r * _log_a(p)
+    a_t = jnp.exp(log_a_t)
+    h = a_t * cache["h"] + jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a_t), 1e-12)) \
+        * i * xc.astype(jnp.float32)
+    y = (h * jax.nn.gelu(xg.astype(jnp.float32))).astype(x_t.dtype)
+    out = jnp.einsum("bm,md->bd", y, p["out_proj"])
+    return out, {"conv": new_conv, "h": h}

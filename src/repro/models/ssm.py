@@ -1,0 +1,108 @@
+"""Mamba-1 selective SSM block (falcon-mamba architecture).
+
+Sequence path (training/prefill) uses the associative/pallas linear scan
+from kernels/linear_scan over the flattened (Dm·N) state channels; the
+decode path is the O(1) single-token state update.
+
+Causal depthwise conv1d (K taps) is expressed as K shifted adds — cheap,
+GSPMD-transparent, and exactly matching the decode-side ring buffer.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.linear_scan.ops import linear_scan
+from .layers import constrain
+
+__all__ = ["mamba_seq", "mamba_decode_step", "causal_conv1d", "conv_step"]
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                  prefix: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """x (B,S,C), w (K,C), b (C); prefix (B,K-1,C) carries decode state."""
+    k = w.shape[0]
+    if prefix is None:
+        prefix = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prefix, x], axis=1)  # (B, S+K-1, C)
+    out = jnp.zeros_like(x)
+    s = x.shape[1]
+    for i in range(k):
+        out = out + w[i] * jax.lax.dynamic_slice_in_dim(xp, i, s, axis=1)
+    return out + b
+
+
+def conv_step(x_t: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+              prefix: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token conv. x_t (B,C); prefix (B,K-1,C) → (y, new_prefix)."""
+    k = w.shape[0]
+    window = jnp.concatenate([prefix, x_t[:, None, :]], axis=1)  # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", window, w) + b
+    return y, window[:, 1:, :]
+
+
+def _ssm_inputs(x_conv, p, cfg):
+    """Shared Δ/B/C computation. x_conv (B,S,Dm) post-conv post-silu."""
+    R, N = cfg.dt_rank_actual, cfg.ssm_state
+    proj = jnp.einsum("bsd,dr->bsr", x_conv, p["x_proj"])  # (B,S,R+2N)
+    dt_r, b_ssm, c_ssm = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jnp.einsum("bsr,rd->bsd", dt_r, p["dt_proj"]) + p["dt_bias"]
+    dt = jax.nn.softplus(dt.astype(jnp.float32))  # (B,S,Dm)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (Dm,N)
+    return dt, a, b_ssm.astype(jnp.float32), c_ssm.astype(jnp.float32)
+
+
+def mamba_seq(x: jnp.ndarray, p: Dict, cfg, *, rules=None,
+              scan_impl: Optional[str] = None, return_cache: bool = False):
+    """Full-sequence mamba mixer. x (B,S,D) → (B,S,D) [, decode cache]."""
+    B, S, D = x.shape
+    Dm, N = cfg.d_inner, cfg.ssm_state
+    K = cfg.ssm_conv
+    xz = jnp.einsum("bsd,dcm->bscm", x, p["in_proj"])  # (B,S,2,Dm)
+    x1_raw, z = xz[:, :, 0], xz[:, :, 1]
+    x1_raw = constrain(x1_raw, rules, "btm")
+    x1 = jax.nn.silu(causal_conv1d(x1_raw, p["conv_w"], p["conv_b"]))
+
+    dt, a, b_ssm, c_ssm = _ssm_inputs(x1, p, cfg)
+    # discretize: ā = exp(dt·A) (B,S,Dm,N); b̄x = dt·x ⊗ B
+    da = jnp.exp(dt[..., None] * a)  # (B,S,Dm,N)
+    dbx = (dt * x1.astype(jnp.float32))[..., None] * b_ssm[:, :, None, :]
+    h, hT = linear_scan(
+        da.reshape(B, S, Dm * N), dbx.reshape(B, S, Dm * N), impl=scan_impl
+    )
+    h = h.reshape(B, S, Dm, N)
+    y = jnp.einsum("bsdn,bsn->bsd", h, c_ssm) + p["d_skip"] * x1.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = constrain(y, rules, "btm")
+    out = jnp.einsum("bsm,md->bsd", y, p["out_proj"])
+    if not return_cache:
+        return out
+    pad = jnp.zeros((B, K - 1, Dm), x1_raw.dtype)
+    conv_tail = jnp.concatenate([pad, x1_raw], axis=1)[:, -(K - 1):]
+    return out, {"conv": conv_tail, "ssm": hT.reshape(B, Dm, N).astype(jnp.float32)}
+
+
+def mamba_decode_step(
+    x_t: jnp.ndarray,  # (B, D) single token
+    p: Dict,
+    cfg,
+    cache: Dict,  # {"conv": (B,K-1,Dm), "ssm": (B,Dm,N) f32}
+    *,
+    rules=None,
+) -> Tuple[jnp.ndarray, Dict]:
+    xz = jnp.einsum("bd,dcm->bcm", x_t, p["in_proj"])
+    x1, z = xz[:, 0], xz[:, 1]  # (B, Dm)
+    xc, new_conv = conv_step(x1, p["conv_w"], p["conv_b"], cache["conv"])
+    xc = jax.nn.silu(xc)
+
+    dt, a, b_ssm, c_ssm = _ssm_inputs(xc[:, None, :], p, cfg)
+    dt, b_ssm, c_ssm = dt[:, 0], b_ssm[:, 0], c_ssm[:, 0]
+    da = jnp.exp(dt[..., None] * a)  # (B,Dm,N)
+    dbx = (dt * xc.astype(jnp.float32))[..., None] * b_ssm[:, None, :]
+    h = da * cache["ssm"] + dbx  # (B,Dm,N)
+    y = jnp.einsum("bdn,bn->bd", h, c_ssm) + p["d_skip"] * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x_t.dtype)
+    out = jnp.einsum("bm,md->bd", y, p["out_proj"])
+    return out, {"conv": new_conv, "ssm": h}

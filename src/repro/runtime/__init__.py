@@ -1,0 +1,2 @@
+"""Runtime health: heartbeats, stragglers, elastic pool."""
+from .monitor import HealthConfig, HealthMonitor  # noqa: F401

@@ -1,0 +1,73 @@
+"""Runtime health: heartbeats, straggler detection, elastic slice pool.
+
+On a real cluster each slice's host posts heartbeats; here the executor
+posts them after every chunk.  Detection logic is shared either way:
+
+  * missed heartbeats ≥ ``max_missed`` → slice presumed dead → scheduler
+    ``drop_slice`` (its commitments re-enter bidding; elastic scale-down).
+  * per-slice speed EWMA (observed/declared duration ratio) below
+    ``straggler_ratio`` → flagged; the executor can then de-prefer it via
+    the window policy or drop/readmit it at reduced speed.
+
+Note the paper-native mitigation also holds: a straggling slice inflates
+observed durations, ex-post ε grows for jobs placed there, and calibration
+shifts bids away — monitor-based detection is the explicit counterpart.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set
+
+__all__ = ["HealthMonitor", "HealthConfig"]
+
+
+@dataclass(frozen=True)
+class HealthConfig:
+    heartbeat_interval: float = 5.0
+    max_missed: int = 3
+    straggler_ratio: float = 0.6  # observed speed below 60% of nominal
+    speed_halflife: int = 8
+
+
+@dataclass
+class _SliceHealth:
+    last_heartbeat: float = 0.0
+    speed_ewma: float = 1.0
+    n_obs: int = 0
+
+
+class HealthMonitor:
+    def __init__(self, cfg: HealthConfig = HealthConfig()):
+        self.cfg = cfg
+        self._slices: Dict[str, _SliceHealth] = {}
+
+    def register(self, slice_id: str, now: Optional[float] = None) -> None:
+        self._slices[slice_id] = _SliceHealth(
+            last_heartbeat=now if now is not None else time.time())
+
+    def remove(self, slice_id: str) -> None:
+        self._slices.pop(slice_id, None)
+
+    def heartbeat(self, slice_id: str, now: Optional[float] = None,
+                  observed_speed: Optional[float] = None) -> None:
+        st = self._slices.setdefault(slice_id, _SliceHealth())
+        st.last_heartbeat = now if now is not None else time.time()
+        if observed_speed is not None:
+            decay = 0.5 ** (1.0 / self.cfg.speed_halflife)
+            st.speed_ewma = decay * st.speed_ewma + (1 - decay) * observed_speed
+            st.n_obs += 1
+
+    def dead_slices(self, now: Optional[float] = None) -> List[str]:
+        now = now if now is not None else time.time()
+        limit = self.cfg.heartbeat_interval * self.cfg.max_missed
+        return [s for s, st in self._slices.items()
+                if now - st.last_heartbeat > limit]
+
+    def stragglers(self) -> List[str]:
+        return [s for s, st in self._slices.items()
+                if st.n_obs >= 2 and st.speed_ewma < self.cfg.straggler_ratio]
+
+    def speed(self, slice_id: str) -> float:
+        st = self._slices.get(slice_id)
+        return st.speed_ewma if st else 1.0

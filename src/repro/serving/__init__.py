@@ -1,0 +1,2 @@
+"""Serving substrate: slot-based continuous batching engine."""
+from .engine import Request, ServeConfig, ServingEngine  # noqa: F401

@@ -1,0 +1,131 @@
+"""Serving engine: continuous batching over a slot-based KV cache.
+
+A fixed pool of B slots shares one stacked cache; requests claim a free
+slot, are prefilled individually (cache rows scattered into their slot),
+and all active slots decode together each step with a per-slot position
+vector.  Finished slots (EOS or max_new_tokens) free immediately and the
+next queued request claims them — classic continuous batching.
+
+JASDA integration: a serving burst is a *job* whose subjob variants are
+"decode N steps for the active slot set"; the executor (core/executor.py)
+bids those into announced windows.  The engine itself is scheduler-free.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import Model
+
+__all__ = ["Request", "ServeConfig", "ServingEngine"]
+
+
+@dataclass
+class Request:
+    request_id: str
+    prompt: np.ndarray  # (P,) int32
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    output: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    batch_slots: int = 4
+    max_seq: int = 256
+    greedy: bool = True
+    temperature: float = 1.0
+    seed: int = 0
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, cfg: ServeConfig, *, rules=None):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.rules = rules
+        B, T = cfg.batch_slots, cfg.max_seq
+        self.cache = model.init_cache(B, T)
+        self.cross_stack = None
+        self.positions = np.zeros((B,), np.int32)  # next write index per slot
+        self.last_token = np.zeros((B,), np.int32)
+        self.slots: List[Optional[Request]] = [None] * B
+        self.queue: List[Request] = []
+        self._rng = np.random.default_rng(cfg.seed)
+
+        self._decode = jax.jit(
+            lambda p, tok, idx, cache: model.decode_step(
+                p, tok, idx, cache, rules=rules))
+        self._prefill = jax.jit(
+            lambda p, toks: model.prefill(p, toks, rules=rules,
+                                          max_seq=cfg.max_seq))
+
+    # -- request lifecycle ------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _claim_slots(self) -> None:
+        for b in range(self.cfg.batch_slots):
+            if self.slots[b] is None and self.queue:
+                req = self.queue.pop(0)
+                self._prefill_into_slot(b, req)
+
+    def _prefill_into_slot(self, b: int, req: Request) -> None:
+        prompt = jnp.asarray(req.prompt[None, :], jnp.int32)
+        logits, cache1, _ = self._prefill(self.params, prompt)
+        # scatter the single-row cache into slot b of the shared cache
+        def place(shared, single):
+            return shared.at[:, b].set(single[:, 0])
+        self.cache = jax.tree.map(place, self.cache, cache1)
+        self.slots[b] = req
+        self.positions[b] = len(req.prompt)
+        self.last_token[b] = int(self._pick(np.asarray(logits)[0]))
+        req.output.append(int(self.last_token[b]))
+
+    def _pick(self, logits: np.ndarray) -> int:
+        if self.cfg.greedy:
+            return int(np.argmax(logits))
+        z = logits / max(self.cfg.temperature, 1e-6)
+        z = z - z.max()
+        p = np.exp(z) / np.exp(z).sum()
+        return int(self._rng.choice(len(p), p=p))
+
+    # -- one decode tick ----------------------------------------------------
+    def step(self) -> int:
+        """Prefill waiting requests into free slots, decode all active ones.
+
+        Returns the number of active slots after the step.
+        """
+        self._claim_slots()
+        active = [b for b in range(self.cfg.batch_slots) if self.slots[b] is not None]
+        if not active:
+            return 0
+        tok = jnp.asarray(self.last_token, jnp.int32)
+        idx = jnp.asarray(self.positions, jnp.int32)
+        logits, self.cache = self._decode(self.params, tok, idx, self.cache)
+        logits = np.asarray(logits)
+        for b in active:
+            req = self.slots[b]
+            nxt = self._pick(logits[b])
+            req.output.append(nxt)
+            self.positions[b] += 1
+            self.last_token[b] = nxt
+            hit_eos = req.eos_id is not None and nxt == req.eos_id
+            full = len(req.output) >= req.max_new_tokens or \
+                self.positions[b] >= self.cfg.max_seq - 1
+            if hit_eos or full:
+                req.done = True
+                self.slots[b] = None  # slot freed; cache row is overwritten
+        return sum(1 for s in self.slots if s is not None)
+
+    def run_until_done(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            n = self.step()
+            if n == 0 and not self.queue:
+                return

@@ -1,0 +1,177 @@
+"""Optimizers from scratch (no optax): AdamW and Adafactor.
+
+Both follow the (init, update) transformation contract:
+
+    state  = opt.init(params)
+    updates, state = opt.update(grads, state, params, step)
+    params = apply_updates(params, updates)
+
+AdamW keeps f32 (m, v) — 8 bytes/param of state.  Adafactor factors the
+second moment into row/col statistics (~0 bytes/param) and skips momentum —
+the fit-critical choice for llama3-405b on 256 chips (DESIGN.md §5).
+Optimizer state inherits each parameter's sharding (same tree structure, so
+the params' NamedShardings apply; factored stats drop the factored dim).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adamw", "adafactor", "apply_updates", "global_norm", "clip_by_global_norm", "Optimizer"]
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params, step) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
+        params, updates)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)
+    ))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw(lr: Callable, *, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        step_f = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1 ** step_f
+        bc2 = 1.0 - b2 ** step_f
+        lr_t = lr(step)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / bc1
+            vhat = v / bc2
+            u = -lr_t * (mhat / (jnp.sqrt(vhat) + eps)
+                         + weight_decay * _decay_mask(p) * p.astype(jnp.float32))
+            return u, m, v
+
+        # per-leaf updates chained with optimization_barrier: forces XLA to
+        # finish (and free) one leaf's f32 temporaries before starting the
+        # next — peak temp memory is one leaf, not the whole tree
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_m = tdef.flatten_up_to(state["m"])
+        flat_v = tdef.flatten_up_to(state["v"])
+        flat_p = tdef.flatten_up_to(params)
+        us, ms, vs = [], [], []
+        prev = None
+        for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+            if prev is not None:
+                g, _ = jax.lax.optimization_barrier((g, prev))
+            u, m2, v2 = upd(g, m, v, p)
+            u = u.astype(p.dtype)  # updates tree in param dtype (memory)
+            prev = u
+            us.append(u); ms.append(m2); vs.append(v2)
+        return (tdef.unflatten(us),
+                {"m": tdef.unflatten(ms), "v": tdef.unflatten(vs)})
+
+    return Optimizer(init, update)
+
+
+def _decay_mask(p) -> float:
+    """No weight decay for vectors/scalars (norm scales, biases, gates)."""
+    return 1.0 if p.ndim >= 2 else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, no momentum)
+# ---------------------------------------------------------------------------
+
+
+def adafactor(lr: Callable, *, eps1: float = 1e-30, eps2: float = 1e-3,
+              clip_threshold: float = 1.0, decay_rate: float = 0.8,
+              weight_decay: float = 0.0) -> Optimizer:
+    """Shazeer & Stern 2018, factored over the two largest dims.
+
+    State per ≥2-D param: row stats (shape minus last dim) + col stats
+    (shape minus second-to-last dim); 1-D params fall back to full v.
+    """
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"stats": jax.tree.map(one, params)}
+
+    def update(grads, state, params, step):
+        step_f = step.astype(jnp.float32) + 1.0
+        rho = 1.0 - step_f ** (-decay_rate)
+        lr_t = lr(step)
+
+        def one(g, st, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps1
+            if _factored(p):
+                vr = rho * st["vr"] + (1 - rho) * jnp.mean(g2, axis=-1)
+                vc = rho * st["vc"] + (1 - rho) * jnp.mean(g2, axis=-2)
+                # rank-1 reconstruction of v
+                denom = jnp.mean(vr, axis=-1, keepdims=True)
+                vhat = (vr[..., None] / jnp.maximum(denom[..., None], eps1)) \
+                    * vc[..., None, :]
+                u = g * jax.lax.rsqrt(jnp.maximum(vhat, eps1))
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                v = rho * st["v"] + (1 - rho) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(v, eps1))
+                new_st = {"v": v}
+            # update clipping (RMS of update ≤ clip_threshold)
+            rms_u = jnp.sqrt(jnp.mean(u * u) + eps1)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            scale = jnp.maximum(
+                eps2, jnp.sqrt(jnp.mean(jnp.square(p.astype(jnp.float32)))))
+            upd = -lr_t * scale * u
+            if weight_decay:
+                upd = upd - lr_t * weight_decay * _decay_mask(p) * p.astype(jnp.float32)
+            return upd, new_st
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_s = tdef.flatten_up_to(state["stats"])
+        flat_p = tdef.flatten_up_to(params)
+        outs = []
+        prev = None
+        for g, s, p in zip(flat_g, flat_s, flat_p):
+            if prev is not None:  # chain: free one leaf's temps before next
+                g, _ = jax.lax.optimization_barrier((g, prev))
+            u, st = one(g, s, p)
+            u = u.astype(p.dtype)  # updates tree in param dtype (memory)
+            prev = u
+            outs.append((u, st))
+        updates = tdef.unflatten([o[0] for o in outs])
+        stats = tdef.unflatten([o[1] for o in outs])
+        return updates, {"stats": stats}
+
+    return Optimizer(init, update)

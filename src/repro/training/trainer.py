@@ -1,0 +1,138 @@
+"""Train-step factory: grad accumulation, clipping, optimizer, metrics.
+
+``make_train_step`` returns a pure function
+    (params, opt_state, batch, step) → (params, opt_state, metrics)
+suitable for jax.jit with in/out shardings.  The global batch is split into
+``microbatches`` chunks accumulated with lax.scan (bounds activation memory;
+remat happens inside the model).  Loss/grads are computed in f32.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import Model
+from .optimizer import Optimizer, apply_updates, clip_by_global_norm
+
+__all__ = ["make_train_step", "make_eval_step", "make_accum_steps"]
+
+
+def make_train_step(
+    model: Model,
+    optimizer: Optimizer,
+    *,
+    rules=None,
+    microbatches: int = 1,
+    attn_impl: str = "auto",
+    remat: bool = True,
+    clip_norm: Optional[float] = 1.0,
+    accum_dtype=jnp.float32,
+) -> Callable:
+    def loss_fn(params, mb):
+        return model.loss_fn(params, mb, rules=rules, impl=attn_impl,
+                             remat=remat)
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def train_step(params, opt_state, batch, step):
+        if microbatches == 1:
+            loss, grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                x = x.reshape((microbatches, b // microbatches) + x.shape[1:])
+                if rules is not None:
+                    # keep the batch dim sharded through the reshape —
+                    # without this GSPMD may replicate the microbatch stream
+                    from jax.sharding import NamedSharding, PartitionSpec
+                    ba = rules.batch_axes if rules.batch_axes else None
+                    spec = PartitionSpec(None, ba, *([None] * (x.ndim - 2)))
+                    x = jax.lax.with_sharding_constraint(
+                        x, NamedSharding(rules.mesh, spec))
+                return x
+
+            micro = jax.tree.map(split, batch)
+
+            def accum(carry, mb):
+                loss_acc, g_acc = carry
+                loss, g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b_: a + b_.astype(accum_dtype), g_acc, g)
+                return (loss_acc + loss, g_acc), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            (loss_sum, grads), _ = jax.lax.scan(
+                accum, (jnp.float32(0.0), zeros), micro)
+            loss = loss_sum / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+
+        gnorm = jnp.float32(0.0)
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = optimizer.update(grads, opt_state, params, step)
+        params = apply_updates(params, updates)
+        metrics = {"loss": loss, "grad_norm": gnorm, "step": step + 1}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model, *, rules=None, attn_impl: str = "auto"):
+    def eval_step(params, batch):
+        return model.loss_fn(params, batch, rules=rules, impl=attn_impl,
+                             remat=False)
+    return eval_step
+
+
+def make_accum_steps(
+    model: Model,
+    optimizer: Optimizer,
+    *,
+    rules=None,
+    attn_impl: str = "auto",
+    remat: bool = True,
+    clip_norm: Optional[float] = 1.0,
+    accum_dtype=jnp.bfloat16,
+    microbatches: int = 1,
+):
+    """External gradient accumulation: two jits instead of one.
+
+    The fused in-jit scan holds TWO gradient trees (carry + current) plus
+    optimizer temporaries at peak — for 405B-class models that alone blows
+    the per-device HBM.  Splitting into
+
+        micro_step(params, grad_acc, micro_batch) → (grad_acc, loss)
+        apply_step(params, opt_state, grads, step) → (params, opt_state, metrics)
+
+    lets the caller donate ``grad_acc`` (true in-place accumulation across
+    dispatches) so each jit peaks at ONE gradient tree.  This is the
+    production pattern for the largest assigned configs (llama3-405b,
+    llama-3.2-vision-90b).
+    """
+    def loss_fn(params, mb):
+        return model.loss_fn(params, mb, rules=rules, impl=attn_impl,
+                             remat=remat)
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def micro_step(params, grad_acc, micro_batch):
+        loss, g = grad_fn(params, micro_batch)
+        grad_acc = jax.tree.map(
+            lambda a, b: a + b.astype(accum_dtype), grad_acc, g)
+        return grad_acc, loss
+
+    def apply_step(params, opt_state, grads, step):
+        grads = jax.tree.map(lambda g: g / microbatches, grads)
+        gnorm = jnp.float32(0.0)
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = optimizer.update(grads, opt_state, params, step)
+        params = apply_updates(params, updates)
+        return params, opt_state, {"grad_norm": gnorm, "step": step + 1}
+
+    return micro_step, apply_step

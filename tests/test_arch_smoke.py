@@ -1,0 +1,109 @@
+"""Per-architecture smoke tests: REDUCED config of the same family, one
+forward/train step on CPU, asserting output shapes + no NaNs (assignment
+requirement).  Full configs are exercised only via the dry-run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, SHAPES, get, reduced
+from repro.models import Model
+from repro.training import adamw, constant, make_train_step
+
+
+def _batch(cfg, key, B=2, S=16):
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.family == "encdec":
+        batch["memory"] = jax.random.normal(
+            key, (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        batch["memory"] = jax.random.normal(
+            key, (B, cfg.vision_seq, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_reduced_config_train_step(arch):
+    cfg = reduced(arch)
+    model = Model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    batch = _batch(cfg, key)
+
+    # forward: shape + finiteness
+    logits, _ = model.forward(params, batch["tokens"],
+                              memory=batch.get("memory"), remat=False)
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    # one full train step
+    opt = adamw(constant(1e-3))
+    opt_state = opt.init(params)
+    step = make_train_step(model, opt, microbatches=1)
+    params2, opt_state2, metrics = step(params, opt_state, batch, jnp.int32(0))
+    assert bool(jnp.isfinite(metrics["loss"]))
+    # params actually moved
+    moved = any(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))) > 0
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_reduced_config_decode_step(arch):
+    cfg = reduced(arch)
+    model = Model(cfg)
+    key = jax.random.PRNGKey(1)
+    params = model.init(key)
+    B, S = 2, 12
+    batch = _batch(cfg, key, B, S)
+    _, cache, cross = model.prefill(
+        params, batch["tokens"][:, :S - 1], memory=batch.get("memory"),
+        max_seq=S)
+    logits, cache2 = model.decode_step(
+        params, batch["tokens"][:, S - 1], jnp.int32(S - 1), cache,
+        cross_stack=cross)
+    assert logits.shape == (B, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_assigned_configs_match_assignment():
+    """The exact table from the assignment."""
+    expect = {
+        "whisper_small": dict(n_layers=12, d_model=768, n_heads=12,
+                              n_kv_heads=12, d_ff=3072, vocab_size=51865),
+        "starcoder2_15b": dict(n_layers=40, d_model=6144, n_heads=48,
+                               n_kv_heads=4, d_ff=24576, vocab_size=49152),
+        "qwen1_5_4b": dict(n_layers=40, d_model=2560, n_heads=20,
+                           n_kv_heads=20, d_ff=6912, vocab_size=151936),
+        "qwen3_14b": dict(n_layers=40, d_model=5120, n_heads=40,
+                          n_kv_heads=8, d_ff=17408, vocab_size=151936),
+        "llama3_405b": dict(n_layers=126, d_model=16384, n_heads=128,
+                            n_kv_heads=8, d_ff=53248, vocab_size=128256),
+        "falcon_mamba_7b": dict(n_layers=64, d_model=4096, ssm_state=16,
+                                vocab_size=65024),
+        "olmoe_1b_7b": dict(n_layers=16, d_model=2048, n_heads=16,
+                            n_kv_heads=16, d_expert=1024, vocab_size=50304,
+                            n_experts=64, top_k=8),
+        "granite_moe_3b_a800m": dict(n_layers=32, d_model=1536, n_heads=24,
+                                     n_kv_heads=8, d_expert=512,
+                                     vocab_size=49155, n_experts=40, top_k=8),
+        "recurrentgemma_9b": dict(n_layers=38, d_model=4096, n_heads=16,
+                                  n_kv_heads=1, d_ff=12288, vocab_size=256000),
+        "llama3_2_vision_90b": dict(n_layers=100, d_model=8192, n_heads=64,
+                                    n_kv_heads=8, d_ff=28672,
+                                    vocab_size=128256),
+    }
+    for arch, fields in expect.items():
+        cfg, _ = get(arch)
+        for k, v in fields.items():
+            assert getattr(cfg, k) == v, f"{arch}.{k}: {getattr(cfg, k)} != {v}"
+
+
+def test_all_four_shapes_defined():
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    assert SHAPES["train_4k"].seq == 4096 and SHAPES["train_4k"].batch == 256
+    assert SHAPES["prefill_32k"].seq == 32768 and SHAPES["prefill_32k"].batch == 32
+    assert SHAPES["decode_32k"].seq == 32768 and SHAPES["decode_32k"].batch == 128
+    assert SHAPES["long_500k"].seq == 524288 and SHAPES["long_500k"].batch == 1

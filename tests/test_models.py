@@ -1,0 +1,137 @@
+"""Model zoo behaviour: fwd/bwd, prefill+decode ≡ forward, MoE/scan paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import Model, ModelConfig
+
+
+def tiny(family, **kw):
+    base = dict(name=f"tiny-{family}", family=family, n_layers=4, d_model=64,
+                n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                model_axis_size=2, dtype=jnp.float32)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+CFGS = {
+    "dense": tiny("dense", qk_norm=True, qkv_bias=True),
+    "moe": tiny("moe", n_experts=8, top_k=2, d_expert=64, capacity_factor=8.0),
+    "ssm": tiny("ssm", n_heads=1, n_kv_heads=1, d_ff=0, ssm_state=8),
+    "hybrid": tiny("hybrid", n_layers=8, pattern=("rglru", "rglru", "attn"),
+                   window=16, n_kv_heads=1),
+    "encdec": tiny("encdec", n_encoder_layers=2, encoder_seq=32,
+                   max_pos_embed=128, gated_mlp=False, act="gelu"),
+    "vlm": tiny("vlm", n_layers=10, cross_attn_every=5, vision_seq=16),
+}
+
+
+def _batch(cfg, key, B=2, S=24):
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.family == "encdec":
+        batch["memory"] = jax.random.normal(key, (B, cfg.encoder_seq, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["memory"] = jax.random.normal(key, (B, cfg.vision_seq, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("family", list(CFGS))
+def test_forward_backward_finite(family):
+    cfg = CFGS[family]
+    m = Model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = m.init(key)
+    batch = _batch(cfg, key)
+    loss, grads = jax.value_and_grad(lambda p: m.loss_fn(p, batch))(params)
+    assert jnp.isfinite(loss)
+    for g in jax.tree.leaves(grads):
+        assert jnp.all(jnp.isfinite(g))
+
+
+@pytest.mark.parametrize("family", list(CFGS))
+def test_prefill_decode_matches_forward(family):
+    cfg = CFGS[family]
+    m = Model(cfg)
+    key = jax.random.PRNGKey(1)
+    params = m.init(key)
+    B, S = 2, 24
+    batch = _batch(cfg, key, B, S)
+    tokens, memory = batch["tokens"], batch.get("memory")
+    logits_full, _ = m.forward(params, tokens, memory=memory, remat=False)
+    _, cache, cross = m.prefill(params, tokens[:, :S - 1], memory=memory,
+                                max_seq=S)
+    logits_dec, _ = m.decode_step(params, tokens[:, S - 1], jnp.int32(S - 1),
+                                  cache, cross_stack=cross)
+    np.testing.assert_allclose(np.asarray(logits_full[:, S - 1]),
+                               np.asarray(logits_dec), atol=3e-4)
+
+
+def test_multistep_decode_consistency():
+    cfg = CFGS["dense"]
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(2))
+    B, S = 2, 20
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab_size)
+    logits_full, _ = m.forward(params, tokens, remat=False)
+    _, cache, _ = m.prefill(params, tokens[:, :10], max_seq=S)
+    for t in range(10, S):
+        logits_dec, cache = m.decode_step(params, tokens[:, t], jnp.int32(t), cache)
+        np.testing.assert_allclose(np.asarray(logits_full[:, t]),
+                                   np.asarray(logits_dec), atol=3e-4)
+
+
+def test_hybrid_ring_cache_beyond_window():
+    """Decode past the window: ring overwrite must preserve exactness."""
+    cfg = CFGS["hybrid"]  # window 16
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(4))
+    B, S = 1, 40  # well past the window
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (B, S), 0, cfg.vocab_size)
+    logits_full, _ = m.forward(params, tokens, remat=False)
+    _, cache, _ = m.prefill(params, tokens[:, :24], max_seq=S)
+    for t in range(24, S):
+        logits_dec, cache = m.decode_step(params, tokens[:, t], jnp.int32(t), cache)
+        np.testing.assert_allclose(np.asarray(logits_full[:, t]),
+                                   np.asarray(logits_dec), atol=3e-4,
+                                   err_msg=f"divergence at position {t}")
+
+
+def test_attention_impls_agree():
+    from repro.models.layers import attention
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    B, S, H, hd = 2, 64, 4, 32
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, 2, hd))
+    v = jax.random.normal(ks[2], (B, S, 2, hd))
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    outs = {}
+    for impl in ("full", "chunked", "triangle", "pallas"):
+        outs[impl] = attention(q, k, v, q_positions=pos, k_positions=pos,
+                               causal=True, impl=impl, chunk_q=16)
+    for impl in ("chunked", "triangle", "pallas"):
+        np.testing.assert_allclose(np.asarray(outs[impl]),
+                                   np.asarray(outs["full"]), atol=2e-5,
+                                   err_msg=impl)
+
+
+def test_moe_capacity_drops_tokens():
+    """With a tight capacity factor some tokens must be dropped (residual
+    passthrough) — the aux loss keeps the router balanced over training."""
+    cfg = tiny("moe", n_experts=4, top_k=1, d_expert=32, capacity_factor=0.5)
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(7))
+    batch = _batch(cfg, jax.random.PRNGKey(8))
+    loss = m.loss_fn(params, batch)
+    assert jnp.isfinite(loss)
+
+
+def test_remat_matches_no_remat():
+    cfg = CFGS["dense"]
+    m = Model(cfg)
+    params = m.init(jax.random.PRNGKey(9))
+    batch = _batch(cfg, jax.random.PRNGKey(10))
+    l1 = m.loss_fn(params, batch, remat=True)
+    l2 = m.loss_fn(params, batch, remat=False)
+    assert float(l1) == pytest.approx(float(l2), rel=1e-5)

@@ -1,0 +1,123 @@
+"""Scheduler invariants + simulator studies (incl. failures, elasticity)."""
+import numpy as np
+import pytest
+
+from repro.core import (AgentConfig, JasdaScheduler, JobAgent, JobSpec,
+                        SchedulerConfig, SimConfig, SliceSpec, simulate,
+                        make_workload)
+from repro.core.baselines import (AuctionScheduler, BackfillScheduler,
+                                  BestFitScheduler, FifoScheduler)
+from repro.core.windows import SliceTimeline, WindowPolicy, announce_window
+
+GB = 1 << 30
+
+
+def _slices(n=3, cap_gb=20, chips=4):
+    return [SliceSpec(f"s{k}", cap_gb * GB, n_chips=chips) for k in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# timeline / window machinery
+# ---------------------------------------------------------------------------
+
+def test_timeline_commit_release_gaps():
+    tl = SliceTimeline(SliceSpec("s", 1 * GB))
+    tl.commit(5, 10)
+    tl.commit(12, 15)
+    gaps = tl.gaps(0, 20)
+    assert gaps == [(0, 5), (10, 12), (15, 20)]
+    tl.release(6, 9)  # carve out of a committed block
+    gaps = tl.gaps(0, 20)
+    assert (6, 9) in gaps
+    with pytest.raises(ValueError):
+        tl.commit(4, 7)  # overlaps [5,6)
+
+
+def test_window_policies_pick_valid_gap():
+    slices = {s.slice_id: SliceTimeline(s) for s in _slices(2)}
+    slices["s0"].commit(0, 50)
+    for kind in ("earliest", "largest", "best_fit", "slack"):
+        w = announce_window(slices, 0.0, WindowPolicy(kind=kind, horizon=100))
+        assert w is not None
+        assert w.duration >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# scheduler invariants
+# ---------------------------------------------------------------------------
+
+def test_no_overlapping_commitments_per_slice():
+    sched = JasdaScheduler(_slices())
+    agents = make_workload(40, seed=3, arrival_rate=0.5)
+    simulate(sched, agents, SimConfig(t_end=1500.0, seed=1))
+    # the timeline itself raises on overlap; double-check commitments per job
+    per_job = {}
+    for c in sched.commitments:
+        per_job.setdefault(c.variant.job_id, []).append(c.variant.interval)
+    for job, ivs in per_job.items():
+        ivs.sort()
+        for (s1, e1), (s2, e2) in zip(ivs, ivs[1:]):
+            assert s2 >= e1 - 1e-9, f"job {job} double-booked"
+
+
+def test_work_conservation():
+    sched = JasdaScheduler(_slices())
+    agents = make_workload(30, seed=5, arrival_rate=0.5)
+    res = simulate(sched, agents, SimConfig(t_end=3000.0, seed=2))
+    for a in sched.agents.values():
+        assert a.work_done <= a.spec.total_work + 1e-6
+    assert res.n_finished == 30  # ample horizon → everything completes
+
+
+def test_capacity_safety_bound_holds():
+    sched = JasdaScheduler(_slices())
+    agents = make_workload(50, seed=7, arrival_rate=1.0)
+    res = simulate(sched, agents, SimConfig(t_end=3000.0, seed=3))
+    n_chunks = res.n_committed
+    # θ = 0.05 per variant is an upper bound; observed rate must respect it
+    assert res.capacity_violations <= max(3, 0.05 * n_chunks)
+
+
+def test_failure_recovery_and_elasticity():
+    sched = JasdaScheduler(_slices())
+    agents = make_workload(30, seed=1, arrival_rate=0.5)
+    res = simulate(sched, agents,
+                   SimConfig(t_end=4000.0, seed=2, failure_rate=0.004,
+                             repair_time=40.0))
+    assert res.n_finished == 30, "atomization must survive slice failures"
+
+
+def test_straggler_mitigation_via_calibration():
+    # one slice at 40% speed: observed durations inflate there, jobs placed
+    # on it accumulate ε, and their declared-vs-observed gap shows up in ρ
+    slices = _slices(2)
+    slow = SliceSpec("slow", 20 * GB, n_chips=4, speed=0.4)
+    sched = JasdaScheduler(slices + [slow])
+    agents = make_workload(30, seed=2, arrival_rate=0.4)
+    res = simulate(sched, agents, SimConfig(t_end=4000.0, seed=4))
+    assert res.n_finished == 30  # stragglers slow things down but don't stall
+
+
+# ---------------------------------------------------------------------------
+# baselines behave
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cls", [FifoScheduler, BackfillScheduler,
+                                 BestFitScheduler, AuctionScheduler])
+def test_baseline_completes_workload(cls):
+    agents = make_workload(20, seed=4, arrival_rate=0.5)
+    res = simulate(cls(_slices()), agents, SimConfig(t_end=3000.0, seed=2))
+    assert res.n_finished == 20
+
+
+def test_jasda_beats_fifo_under_heterogeneity():
+    # MIG-like heterogeneous pool: FIFO head-of-line blocks on big-memory jobs
+    slices = [SliceSpec("s20", 20 * GB, n_chips=4),
+              SliceSpec("s10", 10 * GB, n_chips=2)] + \
+             [SliceSpec(f"s5{i}", 5 * GB, n_chips=1) for i in range(4)]
+    mk = lambda: make_workload(120, seed=1, arrival_rate=0.25,
+                               mem_range_gb=(1.0, 14.0))
+    r_j = simulate(JasdaScheduler(slices), mk(), SimConfig(t_end=6000.0, seed=2))
+    r_f = simulate(FifoScheduler(slices), mk(), SimConfig(t_end=6000.0, seed=2))
+    assert r_j.mean_jct < r_f.mean_jct
+    assert r_j.utilization >= r_f.utilization * 0.9

@@ -1,0 +1,127 @@
+"""Serving engine + runtime health + executor integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import Model, ModelConfig
+from repro.runtime import HealthConfig, HealthMonitor
+from repro.serving import Request, ServeConfig, ServingEngine
+
+
+def _model():
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                      model_axis_size=1, dtype=jnp.float32)
+    m = Model(cfg)
+    return m, m.init(jax.random.PRNGKey(0)), cfg
+
+
+def test_engine_completes_all_requests():
+    m, params, cfg = _model()
+    eng = ServingEngine(m, params, ServeConfig(batch_slots=2, max_seq=64))
+    reqs = [Request(f"r{i}", (np.arange(4 + i) % 256).astype(np.int32),
+                    max_new_tokens=6) for i in range(5)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done()
+    assert all(r.done for r in reqs)
+    assert all(len(r.output) == 6 for r in reqs)
+
+
+def test_continuous_batching_matches_isolated():
+    """Tokens generated with slot-sharing must equal a private engine run."""
+    m, params, cfg = _model()
+    prompts = [(np.arange(5) % 256).astype(np.int32),
+               (np.arange(7)[::-1] % 256).astype(np.int32),
+               ((np.arange(6) * 3) % 256).astype(np.int32)]
+    # isolated: one request per engine
+    solo_out = []
+    for i, p in enumerate(prompts):
+        eng = ServingEngine(m, params, ServeConfig(batch_slots=1, max_seq=64))
+        r = Request(f"solo{i}", p, max_new_tokens=5)
+        eng.submit(r)
+        eng.run_until_done()
+        solo_out.append(r.output)
+    # shared: all three through 2 slots (forces queueing + slot reuse)
+    eng = ServingEngine(m, params, ServeConfig(batch_slots=2, max_seq=64))
+    reqs = [Request(f"shared{i}", p, max_new_tokens=5)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done()
+    for r, expect in zip(reqs, solo_out):
+        assert r.output == expect, "continuous batching changed results"
+
+
+def test_eos_frees_slot():
+    m, params, cfg = _model()
+    eng = ServingEngine(m, params, ServeConfig(batch_slots=1, max_seq=64))
+    # figure out the first generated token, then use it as EOS
+    probe = Request("probe", np.arange(5, dtype=np.int32), max_new_tokens=3)
+    eng.submit(probe)
+    eng.run_until_done()
+    eos = probe.output[0]
+    eng2 = ServingEngine(m, params, ServeConfig(batch_slots=1, max_seq=64))
+    r = Request("r", np.arange(5, dtype=np.int32), max_new_tokens=50, eos_id=eos)
+    eng2.submit(r)
+    eng2.run_until_done()
+    assert r.done and len(r.output) <= 2
+
+
+# ---------------------------------------------------------------------------
+# runtime health
+# ---------------------------------------------------------------------------
+
+def test_dead_slice_detection():
+    mon = HealthMonitor(HealthConfig(heartbeat_interval=1.0, max_missed=3))
+    mon.register("a", now=0.0)
+    mon.register("b", now=0.0)
+    mon.heartbeat("a", now=5.0)
+    assert mon.dead_slices(now=5.0) == ["b"]
+
+
+def test_straggler_detection():
+    mon = HealthMonitor(HealthConfig(straggler_ratio=0.6, speed_halflife=1))
+    mon.register("fast", now=0.0)
+    mon.register("slow", now=0.0)
+    for _ in range(6):
+        mon.heartbeat("fast", now=1.0, observed_speed=1.0)
+        mon.heartbeat("slow", now=1.0, observed_speed=0.3)
+    assert mon.stragglers() == ["slow"]
+    assert mon.speed("slow") < 0.5
+
+
+# ---------------------------------------------------------------------------
+# executor: real training under the interaction cycle
+# ---------------------------------------------------------------------------
+
+def test_executor_runs_real_jobs_to_completion():
+    from repro.core import JasdaScheduler, SliceSpec
+    from repro.core.scheduler import SchedulerConfig
+    from repro.core.windows import WindowPolicy
+    from repro.core.executor import JasdaExecutor, TrainingJob
+
+    GB = 1 << 30
+    sched = JasdaScheduler(
+        [SliceSpec("lane0", 8 * GB, n_chips=1)],
+        SchedulerConfig(window=WindowPolicy(horizon=60.0, min_gap=0.2)))
+    ex = JasdaExecutor(sched)
+    calls = []
+
+    def step_fn(start, n):
+        calls.append((start, n))
+        return {"loss": 1.0 / (start + n)}
+
+    ckpts = []
+    job = TrainingJob(job_id="J", total_steps=25, step_fn=step_fn,
+                      checkpoint_fn=lambda s: ckpts.append(s),
+                      param_bytes=1e6, optimizer_bytes=1e6,
+                      activation_bytes=1e6, steps_per_sec=100.0)
+    ex.register(job)
+    ex.run(max_wall=30.0)
+    assert job.steps_done >= 25
+    assert ckpts, "chunk boundaries must checkpoint"
+    # chunks are contiguous from 0
+    covered = sum(n for _, n in calls)
+    assert covered >= 25

@@ -1,0 +1,76 @@
+"""Sharding rules: logical resolution, divisibility guard, spec kinds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as PS
+
+from repro.distributed.sharding import ShardingRules, resolve_param_specs
+from repro.models import Model
+from repro.configs import ARCH_NAMES, get
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # spec-resolution tests never execute on the mesh, so an abstract
+    # (deviceless) mesh of the production shape is exact and portable
+    return jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+
+
+def test_resolve_logical_axes(mesh):
+    rules = ShardingRules(mesh=mesh, fsdp_axes=("data",))
+    assert rules.resolve(("fsdp", "model")) == PS(("data",), ("model",))
+    assert rules.resolve((None, "model")) == PS(None, ("model",))
+    with pytest.raises(ValueError):
+        rules.resolve(("bogus",))
+
+
+def test_activation_kinds(mesh):
+    rules = ShardingRules(mesh=mesh, batch_axes=("data",))
+    for kind in ("btd", "btf", "btm", "bshk", "btkk", "btv", "gecd", "gecf"):
+        spec = rules.spec(kind)
+        assert isinstance(spec, PS)
+
+
+def test_divisibility_guard_drops_invalid(mesh):
+    from repro.distributed.sharding import guard_spec
+    rules = ShardingRules(mesh=mesh, batch_axes=("data",))
+    # dim 3 not divisible by data=2 → entry dropped; dims 4/8 fine
+    spec = guard_spec(rules.spec("btd"), (3, 4, 8), {"data": 2, "model": 2})
+    assert spec == PS(None, None, None)
+    spec2 = guard_spec(rules.spec("btd"), (4, 4, 8), {"data": 2, "model": 2})
+    assert spec2 == PS(("data",), None, None)
+
+
+def test_headdim_mode_kv_spec(mesh):
+    rules = ShardingRules(mesh=mesh, attn_shard="headdim",
+                          batch_axes=("data",))
+    assert rules.spec("btkk") == PS(("data",), None, None, ("model",))
+    rules2 = ShardingRules(mesh=mesh, shard_kv_seq=True, batch_axes=("data",))
+    assert rules2.spec("btkk") == PS(("data",), ("model",), None, None)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_param_specs_resolve_for_all_archs(arch, mesh):
+    """Every arch's logical spec tree resolves; model-sharded dims divide 16
+    (the production model-axis), guaranteed by config padding choices."""
+    cfg, info = get(arch)
+    model = Model(cfg)
+    logical = model.specs()
+    rules = ShardingRules(mesh=mesh, fsdp_axes=("data",))
+    resolved = resolve_param_specs(logical, rules)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+    def check(path, spec, sds):
+        for dim, entry in zip(sds.shape, tuple(spec)):
+            if entry is None:
+                continue
+            axes = (entry,) if isinstance(entry, str) else tuple(entry)
+            if "model" in axes:
+                assert dim % cfg.model_axis_size == 0, (
+                    f"{arch} {jax.tree_util.keystr(path)}: dim {dim} "
+                    f"not divisible by model axis {cfg.model_axis_size}")
+
+    jax.tree_util.tree_map_with_path(
+        check, resolved, shapes,
+        is_leaf=lambda x: isinstance(x, PS))

@@ -1,0 +1,54 @@
+"""End-to-end system behaviour: the paper's full loop + framework glue."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (JasdaScheduler, SimConfig, SliceSpec, make_workload,
+                        simulate)
+
+GB = 1 << 30
+
+
+def test_full_interaction_cycle_end_to_end():
+    """One complete JASDA lifecycle: announce → bid → clear → commit →
+    execute → verify, with metrics coming out the other side."""
+    slices = [SliceSpec(f"s{k}", 20 * GB, n_chips=2) for k in range(3)]
+    sched = JasdaScheduler(slices)
+    agents = make_workload(25, seed=9, arrival_rate=0.5)
+    res = simulate(sched, agents, SimConfig(t_end=2500.0, seed=1))
+    assert res.n_finished == 25
+    assert res.capacity_violations <= 2
+    assert res.utilization > 0.1
+    # audit trail exists (transparency, paper §5(f))
+    assert len(sched.log) > 100
+    assert any(row.n_selected > 0 for row in sched.log)
+    # ex-post verification ran: every job has calibration state
+    snap = sched.calibrator.snapshot()
+    assert len(snap) == 25
+    assert all(0 < s["rho"] <= 1 for s in snap.values())
+
+
+def test_lambda_policy_spectrum():
+    """Table 2's qualitative claim: the λ knob changes scheduling behaviour
+    (selection order shifts between job-centric and system-centric)."""
+    from repro.core.scheduler import SchedulerConfig
+    from repro.core import ScoringPolicy
+    slices = [SliceSpec("s0", 16 * GB, n_chips=2)]
+    orders = {}
+    for lam in (0.3, 0.7):
+        sched = JasdaScheduler(
+            [SliceSpec("s0", 16 * GB, n_chips=2)],
+            SchedulerConfig(scoring=ScoringPolicy(lam=lam)))
+        agents = make_workload(30, seed=4, arrival_rate=2.0)
+        simulate(sched, agents, SimConfig(t_end=1000.0, seed=2))
+        orders[lam] = tuple(c.variant.job_id for c in sched.commitments[:20])
+    assert orders[0.3] != orders[0.7], "λ must influence clearing decisions"
+
+
+def test_quickstart_example_runs():
+    import subprocess, sys, os
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run([sys.executable, "examples/quickstart.py", "--steps", "5"],
+                         capture_output=True, text=True, env=env, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]

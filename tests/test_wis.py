@@ -1,0 +1,96 @@
+"""WIS clearing: optimality (vs brute force), Table 3, path agreement."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.wis import wis_brute_force, wis_select, wis_select_jax
+from repro.kernels.wis_dp.ops import wis_clear
+
+
+def _random_pool(rng, m):
+    starts = rng.uniform(0, 100, m)
+    ends = starts + rng.uniform(0.5, 30, m)
+    w = rng.uniform(0.0, 1.0, m)
+    return starts, ends, w
+
+
+# ---------------------------------------------------------------------------
+# paper §4.5 worked example (Table 3)
+# ---------------------------------------------------------------------------
+
+def test_table3_worked_example():
+    starts = [40, 47, 40]
+    ends = [47, 50, 50]
+    scores = [0.67, 0.64, 0.72]  # v_A1, v_A2, v_B1
+    sel, total = wis_select(starts, ends, scores)
+    assert set(sel.tolist()) == {0, 1}, "must select {v_A1, v_A2}"
+    assert total == pytest.approx(1.31)
+
+
+def test_table3_scores_from_eq4():
+    # Score = λ·h̃ + (1−λ)·f̃_sys with λ = 0.6 reproduces Table 3 exactly
+    lam = 0.6
+    rows = [(0.75, 0.55, 0.67), (0.60, 0.70, 0.64), (0.80, 0.60, 0.72)]
+    for h, f, score in rows:
+        assert lam * h + (1 - lam) * f == pytest.approx(score)
+
+
+# ---------------------------------------------------------------------------
+# optimality property (hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 14))
+def test_wis_matches_brute_force(seed, m):
+    rng = np.random.default_rng(seed)
+    starts, ends, w = _random_pool(rng, m)
+    sel, total = wis_select(starts, ends, w)
+    _, total_bf = wis_brute_force(starts, ends, w)
+    assert total == pytest.approx(total_bf, abs=1e-9)
+    # selection itself must be feasible (pairwise non-overlapping)
+    sel = sel.tolist()
+    for i in range(len(sel)):
+        for j in range(i + 1, len(sel)):
+            a, b = sel[i], sel[j]
+            assert not (starts[a] < ends[b] - 1e-12 and starts[b] < ends[a] - 1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 12))
+def test_jax_and_kernel_paths_agree(seed, m):
+    rng = np.random.default_rng(seed)
+    starts, ends, w = _random_pool(rng, m)
+    sel_h, total_h = wis_select(starts, ends, w)
+    mask_j, total_j = wis_select_jax(starts, ends, w)
+    sel_k, total_k = wis_clear(starts, ends, w, impl="pallas")
+    assert float(total_j) == pytest.approx(total_h, rel=1e-5)
+    assert total_k == pytest.approx(total_h, rel=1e-5)
+    assert set(np.where(np.asarray(mask_j))[0].tolist()) == set(sel_h.tolist())
+    assert set(sel_k.tolist()) == set(sel_h.tolist())
+
+
+def test_touching_intervals_are_compatible():
+    # [40,47) + [47,50): the paper's example depends on this convention
+    sel, total = wis_select([0, 5], [5, 10], [1.0, 1.0])
+    assert len(sel) == 2 and total == pytest.approx(2.0)
+
+
+def test_empty_pool():
+    sel, total = wis_select([], [], [])
+    assert len(sel) == 0 and total == 0.0
+
+
+def test_rejects_negative_weights():
+    with pytest.raises(ValueError):
+        wis_select([0], [1], [-0.5])
+
+
+def test_complexity_is_loglinear():
+    # smoke for the O(M log M) claim: 20k intervals clears fast
+    import time
+    rng = np.random.default_rng(0)
+    starts, ends, w = _random_pool(rng, 20000)
+    t0 = time.perf_counter()
+    sel, total = wis_select(starts, ends, w)
+    assert time.perf_counter() - t0 < 2.0
+    assert total > 0
