@@ -9,25 +9,31 @@ quantitative study.  Prints ``name,us_per_call,derived`` CSV rows.
   age_fairness           §4.3: β_age sweep vs starvation
   window_policies        §5.1(c): announcement-policy ablation
   atomization_ft         SJA thesis: work lost under failures vs monolithic
+  round_throughput       round-batched clearing vs the single-window loop
+                         (bids cleared/sec vs pool size — the tentpole claim)
   kernels                per-kernel µs/call (CPU interpret / reference paths)
 
-Run: PYTHONPATH=src python -m benchmarks.run [--only NAME]
+Run: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick]
+Rows are also written to BENCH_results.json (BENCH_quick.json with --quick)
+for CI artifact upload.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 from typing import Callable, Dict, List
 
 import numpy as np
 
-ROWS: List[str] = []
+ROWS: List[dict] = []
+QUICK = False
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
-    row = f"{name},{us_per_call:.2f},{derived}"
-    ROWS.append(row)
-    print(row, flush=True)
+    ROWS.append({"name": name, "us_per_call": round(us_per_call, 2),
+                 "derived": derived})
+    print(f"{name},{us_per_call:.2f},{derived}", flush=True)
 
 
 def _time(fn: Callable, n: int = 5, warmup: int = 1) -> float:
@@ -225,6 +231,83 @@ def bench_window_policies():
 
 
 # ---------------------------------------------------------------------------
+# round-batched clearing vs the legacy single-window loop (the tentpole)
+# ---------------------------------------------------------------------------
+
+def bench_round_throughput():
+    """Bids cleared/sec: per-window numpy loop vs one batched round.
+
+    Builds 8 windows on 8 slices with pooled bid sets of growing size, then
+    times (a) the pre-refactor hot path — ``clear_window`` per window with
+    per-variant numpy scoring — against (b) ``clear_round``'s single batched
+    scoring dispatch + per-window WIS.  Selections are cross-checked for
+    equality, so the speedup is measured on identical outcomes.
+    """
+    from repro.core import ScoringPolicy, Window, clear_round, clear_window
+    from repro.core.trp import fmp_standard
+    from repro.core.types import Variant
+
+    GB = 1 << 30
+    policy = ScoringPolicy()
+    rng = np.random.default_rng(7)
+    n_windows = 8
+    # disjoint windows (distinct slices AND time ranges): round and legacy
+    # must produce identical selections — no cross-window conflicts by
+    # construction, so the comparison is pure mechanism overhead
+    windows = [
+        Window(slice_id=f"s{k}", capacity=(6 + 2 * k) * GB,
+               t_min=200.0 * k, duration=150.0)
+        for k in range(n_windows)
+    ]
+
+    def make_pool(m: int):
+        n_jobs = max(8, m // 8)
+        fmps = [fmp_standard(1 * GB, (1.5 + 3 * rng.uniform()) * GB, 0.2 * GB)
+                for _ in range(n_jobs)]
+        ages = {f"J{j}": float(rng.uniform(0, 1)) for j in range(n_jobs)}
+        pool = []
+        for i in range(m):
+            j = i % n_jobs
+            w = windows[rng.integers(0, n_windows)]
+            t0 = w.t_min + rng.uniform(0, w.duration * 0.7)
+            dur = rng.uniform(2.0, (w.t_min + w.duration - t0))
+            pool.append(Variant(
+                job_id=f"J{j}", slice_id=w.slice_id, t_start=t0, duration=dur,
+                fmp=fmps[j], local_utility=float(rng.uniform(0.1, 0.9)),
+                declared_features={}, payload={"work": dur},
+                variant_id=f"J{j}/v{i}"))
+        return pool, ages
+
+    sizes = (64, 256) if QUICK else (64, 256, 1024)
+    reps = 3 if QUICK else 5
+    for m in sizes:
+        pool, ages = make_pool(m)
+
+        def legacy():
+            return [clear_window(w, pool, policy, ages=ages) for w in windows]
+
+        def batched():
+            return clear_round(windows, pool, policy, ages=ages)
+
+        sel_legacy = [tuple(v.variant_id for v in r.selected) for r in legacy()]
+        rr = batched()
+        sel_round = [tuple(v.variant_id for v in r.selected) for r in rr.results]
+        identical = sel_legacy == sel_round
+        # the speedup claim is only meaningful on identical outcomes — make
+        # CI smoke fail loudly if the paths ever diverge
+        assert identical, (
+            f"round/legacy selections diverged at M={m}: {sel_round} vs {sel_legacy}"
+        )
+
+        us_l = _time(legacy, n=reps)
+        us_r = _time(batched, n=reps)
+        speedup = us_l / max(us_r, 1e-9)
+        emit(f"round_throughput_M{m}", us_r,
+             f"bids/s={m / (us_r / 1e6):.0f} single_window_us={us_l:.0f} "
+             f"speedup={speedup:.2f}x identical_selections={identical}")
+
+
+# ---------------------------------------------------------------------------
 # kernels (CPU timings: interpret for pallas paths, XLA for refs)
 # ---------------------------------------------------------------------------
 
@@ -280,19 +363,38 @@ BENCHES: Dict[str, Callable] = {
     "age_fairness": bench_age_fairness,
     "window_policies": bench_window_policies,
     "atomization_ft": bench_atomization_ft,
+    "round_throughput": bench_round_throughput,
     "kernels": bench_kernels,
 }
 
+# CI smoke subset: fast, no multi-minute simulator sweeps
+QUICK_BENCHES = ("table3_clearing", "round_throughput", "kernels")
+
 
 def main() -> None:
+    global QUICK
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: fast subset + reduced sizes")
+    ap.add_argument("--json", default=None,
+                    help="output path (default BENCH_results.json / BENCH_quick.json)")
     args = ap.parse_args()
+    QUICK = args.quick
+    if args.only and args.only not in BENCHES:
+        ap.error(f"unknown benchmark {args.only!r}; choose from: "
+                 + ", ".join(BENCHES))
     print("name,us_per_call,derived")
     for name, fn in BENCHES.items():
         if args.only and args.only != name:
             continue
+        if args.quick and not args.only and name not in QUICK_BENCHES:
+            continue
         fn()
+    out = args.json or ("BENCH_quick.json" if args.quick else "BENCH_results.json")
+    with open(out, "w") as f:
+        json.dump(ROWS, f, indent=2)
+    print(f"# wrote {out}", flush=True)
 
 
 if __name__ == "__main__":

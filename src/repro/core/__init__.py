@@ -16,6 +16,7 @@ from .types import (  # noqa: F401
     Commitment,
     JobSpec,
     JobState,
+    RoundResult,
     SliceSpec,
     Variant,
     Window,
@@ -39,14 +40,21 @@ from .scoring import (  # noqa: F401
     ScoringPolicy,
     composite_score,
     score_pool,
+    score_round,
 )
 from .wis import wis_brute_force, wis_select, wis_select_jax  # noqa: F401
 from .calibration import CalibrationConfig, Calibrator, per_variant_error, reliability  # noqa: F401
 from .fairness import AgePolicy, AgeTracker, jain_index  # noqa: F401
-from .windows import SliceTimeline, WindowPolicy, announce_window  # noqa: F401
+from .windows import (  # noqa: F401
+    DeadWindowRegistry,
+    SliceTimeline,
+    WindowPolicy,
+    announce_window,
+    announce_windows,
+)
 from .atomizer import AtomizerConfig, ChunkPlan, chunk_candidates  # noqa: F401
 from .jobs import AgentConfig, JobAgent  # noqa: F401
-from .clearing import clear_window  # noqa: F401
+from .clearing import clear_round, clear_window  # noqa: F401
 from .scheduler import JasdaScheduler, SchedulerConfig  # noqa: F401
 from .simulator import SimConfig, SimResult, make_workload, simulate  # noqa: F401
 from .baselines import (  # noqa: F401

@@ -27,7 +27,7 @@ import numpy as np
 
 from .jobs import JobAgent
 from .trp import is_safe, predict_duration
-from .types import ClearingResult, Commitment, SliceSpec, Variant, Window
+from .types import ClearingResult, Commitment, RoundResult, SliceSpec, Variant, Window
 from .windows import SliceTimeline
 
 __all__ = [
@@ -109,6 +109,36 @@ class MonolithicScheduler:
             agent.work_done = 0.0
             if variant.job_id not in self._queue:
                 self._queue.append(variant.job_id)
+
+    # -- round API (simulator interface) --------------------------------------
+    def run_round(self, now: float) -> Optional[RoundResult]:
+        """Drive the baseline's step() to quiescence for one scheduler tick.
+
+        Monolithic baselines have no batched auction; a "round" is the
+        legacy greedy loop (bounded like the pre-round simulator driver was)
+        packaged behind the same interface JASDA's round exposes, so the
+        simulator drives every scheduler uniformly.
+        """
+        results: List[ClearingResult] = []
+        selected: List[Variant] = []
+        budget = 3 * max(len(self.slices), 1)
+        while budget > 0:
+            budget -= 1
+            res = self.step(now)
+            if res is None:
+                break
+            results.append(res)
+            selected.extend(res.selected)
+        if not results:
+            return None
+        return RoundResult(
+            windows=tuple(r.window for r in results),
+            results=tuple(results),
+            selected=tuple(selected),
+            scores=tuple(s for r in results for s in r.scores),
+            total_score=float(sum(r.total_score for r in results)),
+            n_bids=sum(r.n_bids for r in results),
+        )
 
     def utilization(self, t_from: float, t_to: float) -> Dict[str, float]:
         out = {}

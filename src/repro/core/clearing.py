@@ -1,29 +1,39 @@
-"""Per-window clearing (paper §4.4, Algorithm 1).
+"""Auction-round clearing (paper §4.4, Algorithm 1, batched across windows).
 
-One JASDA iteration over an announced window w*:
+The round model generalizes the paper's per-window iteration: one round
+announces ALL open windows, pools every job's bids, scores the pooled set in
+ONE batched dispatch (scoring.score_round → kernels/jasda_score), then runs
+the optimal WIS selection per window plus cross-window conflict resolution:
 
-    1:  announce w* to all jobs
-    4:  each job generates eligible variants V_i (jobs.py)
-    6-8: Score(v) = λ ĥ(v) + (1−λ) f̃_sys(v)   (scoring.py + calibration.py)
-    11: V = ∪ V_i
-    12: Ŝ = SelectBestCompatibleVariants(V, Score)   (wis.py — optimal WIS)
-    13: commit Ŝ, update layout and statistics
+    1:    announce W = {w_1..w_K} to all jobs          (windows.py)
+    4:    each job generates eligible variants over W  (jobs.py)
+    6-8:  Score(v) = λ ĥ(v) + (1−λ) f̃_sys(v)           (one batched call)
+    11:   V = ∪_J ∪_w V_{J,w}
+    12:   per window: Ŝ_w = SelectBestCompatibleVariants(V_w, Score)
+    12b:  cross-window resolution — a job winning overlapping intervals on
+          two slices (or more total work than it has) keeps only its
+          best-scored wins; freed capacity is re-cleared within the round
+          until a fixed point (bans grow monotonically, so ≤ |V| passes).
+    13:   commit ∪_w Ŝ_w, update layout and statistics (scheduler.py)
 
-The function is pure given its inputs; state mutation (commit, age updates,
-calibration) is the scheduler's job.
+:func:`clear_window` is the single-window special case (the paper's original
+Algorithm 1) and remains the numpy reference path; the scheduler's ``step()``
+compatibility wrapper and the equivalence tests pin round == legacy on one
+window.  Both functions are pure given their inputs; state mutation (commit,
+age updates, calibration) is the scheduler's job.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, List, Mapping, Optional, Sequence
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .scoring import ScoringPolicy, score_pool
-from .types import ClearingResult, Variant, Window
+from .scoring import ScoringPolicy, score_pool, score_round
+from .types import ClearingResult, RoundResult, Variant, Window
 from .wis import wis_select
 
-__all__ = ["clear_window"]
+__all__ = ["clear_window", "clear_round"]
 
 
 def clear_window(
@@ -73,4 +83,152 @@ def _fits(v: Variant, w: Window, eps: float = 1e-9) -> bool:
         and v.t_start >= w.t_min - eps
         and v.t_end <= w.t_end + eps
         and v.duration > 0
+    )
+
+
+def _overlap(a: Variant, b: Variant, eps: float = 1e-12) -> bool:
+    return a.t_start < b.t_end - eps and b.t_start < a.t_end - eps
+
+
+def clear_round(
+    windows: Sequence[Window],
+    variants: Sequence[Variant],
+    policy: ScoringPolicy,
+    *,
+    ages: Optional[Mapping[str, float]] = None,
+    calibrate: Optional[Callable[[Variant, float], float]] = None,
+    selector: Callable = wis_select,
+    work_budget: Optional[Mapping[str, float]] = None,
+    score_impl: Optional[str] = None,
+) -> RoundResult:
+    """Clear one batched auction round over ALL announced windows.
+
+    Scores the pooled bids in a single batched dispatch, runs WIS per window,
+    then resolves cross-window conflicts: a job that wins overlapping
+    intervals on two slices keeps only its best-scored win, and (when
+    ``work_budget`` maps job_id → biddable work) a job never wins more total
+    work than it has — over-budget wins are revoked cheapest-first.  Windows
+    that lose a winner are re-cleared against their remaining candidates
+    within the round, iterating to a fixed point.
+
+    Returns a :class:`RoundResult`; ``results`` aligns with ``windows``.
+    """
+    windows = list(windows)
+    if not windows:
+        return RoundResult((), (), (), (), 0.0, 0)
+
+    # -- assign each pooled bid to the (unique) window containing it ----------
+    by_slice: Dict[str, List[int]] = {}
+    for k, w in enumerate(windows):
+        by_slice.setdefault(w.slice_id, []).append(k)
+    fit: List[Variant] = []
+    win_idx: List[int] = []
+    for v in variants:
+        for k in by_slice.get(v.slice_id, ()):
+            if _fits(v, windows[k]):
+                fit.append(v)
+                win_idx.append(k)
+                break
+    if not fit:
+        empty = [
+            ClearingResult(window=w, selected=(), scores=(), total_score=0.0, n_bids=0)
+            for w in windows
+        ]
+        return RoundResult(tuple(windows), tuple(empty), (), (), 0.0, 0)
+
+    # -- one batched scoring call over the pooled bids (lines 6–8) ------------
+    scores = score_round(
+        fit, windows, np.asarray(win_idx), policy,
+        ages=ages, calibrate=calibrate, impl=score_impl,
+    )
+
+    members: List[List[int]] = [[] for _ in windows]  # window -> pool indices
+    for i, k in enumerate(win_idx):
+        members[k].append(i)
+
+    banned = np.zeros(len(fit), dtype=bool)
+    selected_per_window: List[List[int]] = [[] for _ in windows]
+    dirty = list(range(len(windows)))
+    n_conflicts = 0
+
+    def _reclear(k: int) -> None:
+        idx = [i for i in members[k] if not banned[i]]
+        if not idx:
+            selected_per_window[k] = []
+            return
+        starts = np.array([fit[i].t_start for i in idx])
+        ends = np.array([fit[i].t_end for i in idx])
+        sel, _ = selector(starts, ends, scores[idx])
+        selected_per_window[k] = [idx[int(j)] for j in np.asarray(sel)]
+
+    # fixed point: each pass bans ≥ 1 variant or terminates, so the loop is
+    # bounded by the pool size
+    while True:
+        for k in dirty:
+            _reclear(k)
+        dirty = []
+
+        # per-job win lists across all windows, best score first
+        wins_by_job: Dict[str, List[int]] = {}
+        for k, sel in enumerate(selected_per_window):
+            for i in sel:
+                wins_by_job.setdefault(fit[i].job_id, []).append(i)
+        newly_banned = False
+        for job_id, wins in wins_by_job.items():
+            if len(wins) < 2 and work_budget is None:
+                continue
+            wins.sort(key=lambda i: (-scores[i], fit[i].t_start, win_idx[i]))
+            kept: List[int] = []
+            used_work = 0.0
+            budget = None
+            if work_budget is not None:
+                budget = work_budget.get(job_id)
+            for i in wins:
+                drop = any(_overlap(fit[i], fit[j]) and win_idx[i] != win_idx[j]
+                           for j in kept)
+                if not drop and budget is not None:
+                    work = float(fit[i].payload["work"]) if fit[i].payload else 0.0
+                    if used_work + work > budget + 1e-9:
+                        drop = True
+                    else:
+                        used_work += work
+                if drop:
+                    banned[i] = True
+                    newly_banned = True
+                    n_conflicts += 1
+                    if win_idx[i] not in dirty:
+                        dirty.append(win_idx[i])
+                else:
+                    kept.append(i)
+        if not newly_banned:
+            break
+
+    # -- package per-window results + the flattened commit set ----------------
+    results: List[ClearingResult] = []
+    all_selected: List[Variant] = []
+    all_scores: List[float] = []
+    for k, w in enumerate(windows):
+        sel = sorted(selected_per_window[k], key=lambda i: fit[i].t_start)
+        sel_set = set(sel)
+        rejected = tuple(fit[i] for i in members[k] if i not in sel_set)
+        results.append(
+            ClearingResult(
+                window=w,
+                selected=tuple(fit[i] for i in sel),
+                scores=tuple(float(scores[i]) for i in sel),
+                total_score=float(sum(scores[i] for i in sel)),
+                n_bids=len(members[k]),
+                rejected=rejected,
+            )
+        )
+        all_selected.extend(fit[i] for i in sel)
+        all_scores.extend(float(scores[i]) for i in sel)
+    return RoundResult(
+        windows=tuple(windows),
+        results=tuple(results),
+        selected=tuple(all_selected),
+        scores=tuple(all_scores),
+        total_score=float(sum(all_scores)),
+        n_bids=len(fit),
+        n_conflicts=n_conflicts,
     )

@@ -1,8 +1,14 @@
 """Job agents (paper §3.2–§3.3): autonomous variant generation and bidding.
 
 Each JobAgent owns a JobSpec + mutable progress state and implements the
-job side of the interaction cycle: given an announced window w*, it either
-returns a list of eligible, locally scored variants or stays silent.
+job side of the interaction cycle.  In the round model the scheduler
+announces ALL open windows at once and the agent answers with one pooled
+bid list (:meth:`JobAgent.generate_variants_round`); per-window generation
+(:meth:`JobAgent.generate_variants`) remains the building block and the
+legacy single-window API.  An agent may bid the same remaining work against
+several windows in one round — cross-window exclusivity (a job never holds
+two overlapping intervals, and never wins more work than it has) is enforced
+at clearing time (clearing.clear_round), not at generation time.
 
 Eligibility (paper §4.1):
   (a) probabilistic safety  Pr(max RAM > c_k | FMP) ≤ θ   (safe-by-construction)
@@ -17,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Mapping, Optional
+from typing import Dict, List, Mapping, Optional, Sequence
 
 import numpy as np
 
@@ -65,6 +71,9 @@ class JobAgent:
         # — it must never hold two overlapping intervals, even across slices)
         self.outstanding_work: float = 0.0
         self.committed_intervals: list = []
+        # safety verdicts are a function of (capacity,) only for a fixed FMP —
+        # memoized so a round over many same-capacity windows checks once
+        self._safety_cache: Dict[float, bool] = {}
 
     # -- progress ------------------------------------------------------------
     @property
@@ -113,16 +122,46 @@ class JobAgent:
             return 0.0
         return float(n_chips)
 
-    # -- the job side of one JASDA iteration (steps 2–3) ----------------------
+    def _is_safe_on(self, capacity: float) -> bool:
+        """Condition (a) memoized by capacity (the FMP is fixed per agent)."""
+        hit = self._safety_cache.get(capacity)
+        if hit is None:
+            hit = is_safe(
+                self.spec.fmp, capacity, self.cfg.theta, method=self.cfg.safety_method
+            )
+            self._safety_cache[capacity] = hit
+        return hit
+
+    # -- the job side of one auction round (steps 2–3) -------------------------
+    def generate_variants_round(
+        self,
+        windows: Sequence[Window],
+        now: float,
+        n_chips: Optional[Mapping[str, int]] = None,
+    ) -> List[Variant]:
+        """Bid against the FULL window set of a round in one call.
+
+        Variants for different windows may claim the same remaining work (and
+        overlapping time spans on different slices); the round clearing keeps
+        at most one win per conflict.  ``n_chips`` maps slice_id → chip count.
+        """
+        if self.finished or self.biddable_work <= 1e-9:
+            return []
+        out: List[Variant] = []
+        for w in windows:
+            chips = n_chips.get(w.slice_id, 1) if n_chips else 1
+            out.extend(self.generate_variants(w, now, chips))
+        return out
+
+    # -- the job side of one JASDA iteration (steps 2–3, single window) --------
     def generate_variants(self, window: Window, now: float, n_chips: int = 1) -> List[Variant]:
         if self.finished or self.biddable_work <= 1e-9:
             return []
         thr = self.throughput_on(window.capacity, n_chips)
         if thr <= 0:
             return []  # condition (b) fails → silent
-        fmp: PhaseFMP = self.spec.fmp
         # condition (a): probabilistic safety against this slice's capacity
-        if not is_safe(fmp, window.capacity, self.cfg.theta, method=self.cfg.safety_method):
+        if not self._is_safe_on(window.capacity):
             return []
 
         # Build a CHAIN of sequential chunks through the window (the paper's

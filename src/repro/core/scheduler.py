@@ -1,15 +1,22 @@
-"""The JASDA scheduler (paper §3: the five-step interaction cycle).
+"""The JASDA scheduler (paper §3), refactored to batched auction rounds.
 
-``JasdaScheduler`` owns the control plane:
+``JasdaScheduler`` owns the control plane.  One :meth:`JasdaScheduler.run_round`
+drives the paper's five-step cycle over ALL open capacity at once:
 
-  * slice timelines + window announcement        (windows.py, step 1)
-  * bid collection from registered JobAgents     (jobs.py, steps 2–3)
-  * calibrated scoring + optimal WIS clearing    (clearing.py, step 4)
-  * commitment + bookkeeping + fairness/trust    (step 5)
+  * announce every eligible window across every slice   (windows.py, step 1)
+  * pooled bid collection from registered JobAgents     (jobs.py, steps 2–3)
+  * ONE batched scoring dispatch + per-window WIS with
+    cross-window conflict resolution                    (clearing.py, step 4)
+  * commitment + bookkeeping + fairness/trust           (step 5)
 
-It is execution-agnostic: the simulator (simulator.py) and the real TPU
-executor (executor.py) both drive it through ``step()`` and feed back
-observations through ``complete()``.  That separation mirrors the paper's
+The paper prototype's one-window-per-iteration loop (A3) survives as the
+thin :meth:`JasdaScheduler.step` compatibility wrapper — a round restricted
+to the single policy-preferred window — so external drivers (executor.py)
+and the equivalence tests keep working unchanged.
+
+The scheduler is execution-agnostic: the simulator (simulator.py) and the
+real TPU executor (executor.py) both feed back observations through
+``complete()``/``fail()``.  That separation mirrors the paper's
 architecture, where the scheduler reasons only over declared profiles and
 ex-post measurements.
 """
@@ -21,12 +28,13 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .calibration import CalibrationConfig, Calibrator
-from .clearing import clear_window
+from .clearing import clear_round
 from .fairness import AgePolicy, AgeTracker
 from .jobs import JobAgent
 from .scoring import ScoringPolicy
-from .types import ClearingResult, Commitment, JobSpec, SliceSpec, Variant, Window
-from .windows import SliceTimeline, WindowPolicy, announce_window
+from .types import ClearingResult, Commitment, JobSpec, RoundResult, SliceSpec, Variant, Window
+from .windows import (DeadWindowRegistry, SliceTimeline, WindowPolicy,
+                      announce_window, announce_windows)
 
 __all__ = ["JasdaScheduler", "SchedulerConfig"]
 
@@ -40,11 +48,22 @@ class SchedulerConfig:
     # windows announced but receiving no winning bids are excluded for this
     # much TIME (prevents re-announcing a dead gap forever)
     dead_window_cooldown: float = 8.0
+    # epsilon for matching a re-derived gap against a suppressed window
+    # (float drift from releases/early finishes must not resurrect it)
+    dead_window_eps: float = 1e-6
+    # batched-scoring backend override: None = auto (Pallas on TPU, jnp
+    # reference elsewhere); "ref" | "pallas" to force
+    score_impl: Optional[str] = None
 
 
 @dataclass
 class IterationLog:
-    """One row of the scheduler's audit trail (transparency, paper §5(f))."""
+    """One row of the scheduler's audit trail (transparency, paper §5(f)).
+
+    In round mode a row covers the whole round: ``n_windows`` announced
+    windows cleared together (``window`` keeps the first announced window
+    for backward compatibility; None when the round was empty).
+    """
 
     t: float
     window: Optional[Window]
@@ -52,6 +71,8 @@ class IterationLog:
     n_bids: int
     n_selected: int
     total_score: float
+    n_windows: int = 0
+    n_conflicts: int = 0
 
 
 class JasdaScheduler:
@@ -66,7 +87,7 @@ class JasdaScheduler:
         self.commitments: List[Commitment] = []
         self.log: List[IterationLog] = []
         self.retired_intervals: Dict[str, List[Tuple[float, float]]] = {}
-        self._dead_windows: Dict[Tuple[str, float], float] = {}  # key -> expiry time
+        self._dead_windows = DeadWindowRegistry(eps=config.dead_window_eps)
 
     # -- membership -----------------------------------------------------------
     def add_job(self, agent: JobAgent, now: float) -> None:
@@ -99,54 +120,87 @@ class JasdaScheduler:
                 agent.mark_settled(c.variant)  # work becomes biddable again
         return lost
 
-    # -- the interaction cycle --------------------------------------------------
+    # -- the interaction cycle: batched auction rounds --------------------------
+    def run_round(self, now: float) -> Optional[RoundResult]:
+        """Run ONE auction round over every announceable window.
+
+        Returns None when no window is announceable (idle control plane).
+        """
+        self._dead_windows.prune(now)
+        windows = announce_windows(
+            self.slices, now, self.config.window, exclude=self._dead_windows
+        )
+        if not windows:
+            self.log.append(IterationLog(now, None, 0, 0, 0, 0.0))
+            return None
+        return self._execute_round(now, windows)
+
     def step(self, now: float) -> Optional[ClearingResult]:
-        """Run ONE JASDA iteration (Algorithm 1). Returns None if no window."""
-        self._dead_windows = {k: e for k, e in self._dead_windows.items() if e > now}
+        """Legacy single-window iteration (paper A3): a one-window round.
+
+        Thin compatibility wrapper over the round machinery; selections are
+        identical to the pre-round per-window path (equivalence-tested).
+        """
+        self._dead_windows.prune(now)
         window = announce_window(
-            self.slices, now, self.config.window, exclude=set(self._dead_windows)
+            self.slices, now, self.config.window, exclude=self._dead_windows
         )
         if window is None:
             self.log.append(IterationLog(now, None, 0, 0, 0, 0.0))
             return None
+        return self._execute_round(now, [window]).results[0]
 
-        # Steps 2–3: jobs respond (or stay silent).
+    def _execute_round(self, now: float, windows: Sequence[Window]) -> RoundResult:
+        # Steps 2–3: every job answers the full window set (or stays silent).
+        chips = {sid: tl.spec.n_chips for sid, tl in self.slices.items()}
         pool: List[Variant] = []
         bidders = 0
-        n_chips = self.slices[window.slice_id].spec.n_chips
+        budget: Dict[str, float] = {}
         for agent in self.agents.values():
-            vs = agent.generate_variants(window, now, n_chips)
+            vs = agent.generate_variants_round(windows, now, chips)
             if vs:
                 bidders += 1
                 pool.extend(vs)
+                budget[agent.spec.job_id] = agent.biddable_work
 
-        # Step 4: calibrated scoring + optimal clearing.
-        result = clear_window(
-            window,
+        # Step 4: one batched scoring dispatch + WIS per window + cross-window
+        # conflict resolution (a job keeps only compatible best-scored wins).
+        rr = clear_round(
+            windows,
             pool,
             self.config.scoring,
             ages=self.ages.ages(now),
             calibrate=self.calibrator.calibrate,
+            work_budget=budget,
+            score_impl=self.config.score_impl,
         )
 
-        # Step 5: commit and advance.
-        if result.selected:
-            tl = self.slices[window.slice_id]
-            for v, s in zip(result.selected, result.scores):
-                tl.commit(v.t_start, v.t_end)
-                self.commitments.append(Commitment(variant=v, commit_time=now, score=s))
-                self.ages.mark_selected(v.job_id, now)
-                agent = self.agents[v.job_id]
-                agent.n_wins += 1
-                agent.mark_committed(v)
-        else:
-            key = (window.slice_id, round(window.t_min, 9))
-            self._dead_windows[key] = now + self.config.dead_window_cooldown
+        # Step 5: commit winners; suppress windows that cleared empty.
+        for result in rr.results:
+            if result.selected:
+                tl = self.slices[result.window.slice_id]
+                for v, s in zip(result.selected, result.scores):
+                    tl.commit(v.t_start, v.t_end)
+                    self.commitments.append(Commitment(variant=v, commit_time=now, score=s))
+                    self.ages.mark_selected(v.job_id, now)
+                    agent = self.agents[v.job_id]
+                    agent.n_wins += 1
+                    agent.mark_committed(v)
+            else:
+                self._dead_windows.add(
+                    result.window.slice_id,
+                    result.window.t_min,
+                    now + self.config.dead_window_cooldown,
+                )
 
+        rr.n_bidders = bidders
         self.log.append(
-            IterationLog(now, window, bidders, result.n_bids, len(result.selected), result.total_score)
+            IterationLog(
+                now, windows[0], bidders, rr.n_bids, len(rr.selected),
+                rr.total_score, n_windows=len(windows), n_conflicts=rr.n_conflicts,
+            )
         )
-        return result
+        return rr
 
     # -- ex-post feedback (paper §4.2.1) -----------------------------------------
     def complete(
@@ -162,7 +216,7 @@ class JasdaScheduler:
 
         Updates calibration state (ρ_J, HistAvg) and job progress; if the
         subjob finished EARLY, the reclaimed tail of its committed interval
-        is released back to the timeline (new window for future iterations).
+        is released back to the timeline (new window for future rounds).
         """
         eps = self.calibrator.verify(variant, observed_features, observed_utility)
         agent = self.agents.get(variant.job_id)

@@ -33,6 +33,7 @@ __all__ = [
     "SystemFeatures",
     "composite_score",
     "score_pool",
+    "score_round",
     "job_utility",
     "system_utility",
     "POLICY_QOS_FIRST",
@@ -87,6 +88,10 @@ class ScoringPolicy:
     def replace(self, **kw) -> "ScoringPolicy":
         return dataclasses.replace(self, **kw)
 
+
+# Pools smaller than this score on host numpy when impl is unset: one jnp /
+# Pallas dispatch costs more than the whole matmul at these sizes.
+SMALL_POOL_M = 256
 
 # Table 2 presets.
 POLICY_QOS_FIRST = ScoringPolicy(lam=0.7)
@@ -243,3 +248,61 @@ def score_pool(
         )
         out[idx] = composite_score(h, f, policy.lam)
     return out
+
+
+def score_round(
+    variants: Sequence[Variant],
+    windows: Sequence[Window],
+    win_idx,
+    policy: ScoringPolicy,
+    *,
+    ages: Optional[Mapping[str, float]] = None,
+    calibrate: Optional[Callable[[Variant, float], float]] = None,
+    impl: Optional[str] = None,
+    grid: int = 32,
+) -> np.ndarray:
+    """Score a pooled ROUND of bids with ONE batched dispatch (Eq. 4).
+
+    Semantically equivalent to running :func:`score_pool` per window over
+    each window's sub-pool, but the union of all bids is packed into
+    struct-of-arrays (``kernels/jasda_score.pool_to_arrays_round``) and
+    scored in a single vectorized call — the Pallas kernel on TPU, the jnp
+    reference elsewhere (``impl`` forces a path).  Calibration (§4.2.1) is a
+    host-side per-job transform, applied before packing; safety (condition
+    (a)) was already enforced at variant generation, so the kernel's
+    eligibility mask is packed as a no-op.
+
+    ``win_idx[i]`` gives the index into ``windows`` that variant i bids on.
+    ``impl``: None = auto (host numpy below ``SMALL_POOL_M`` bids, else
+    Pallas on TPU / jnp reference), or "numpy" | "ref" | "pallas" to force.
+    Returns float scores aligned with ``variants``.
+    """
+    m = len(variants)
+    if m == 0:
+        return np.zeros(0, dtype=np.float64)
+    # lazy import: keeps the numpy-only control plane importable without jax
+    from ..kernels.jasda_score.ops import pool_to_arrays_round
+
+    h = np.empty(m, dtype=np.float64)
+    for i, v in enumerate(variants):
+        h[i] = calibrate(v, v.local_utility) if calibrate is not None else v.local_utility
+    fj, fs, alphas, betas, mu, sg = pool_to_arrays_round(
+        variants, windows, np.asarray(win_idx), policy,
+        h=h, ages=ages, grid=grid, pack_grids=False,
+    )
+    if impl is None and m < SMALL_POOL_M:
+        # device-dispatch overhead dominates tiny pools; same math on host
+        impl = "numpy"
+    if impl == "numpy":
+        # packed arrays are float64: ranks match the legacy per-window path
+        hh = np.clip(fj @ alphas, 0.0, 1.0)
+        ff = np.clip(fs @ betas, 0.0, 1.0)
+        return policy.lam * hh + (1.0 - policy.lam) * ff
+
+    from ..kernels.jasda_score.ops import score_variants
+
+    scores, _, _ = score_variants(
+        fj, fs, alphas, betas, mu, sg,
+        lam=policy.lam, capacity=1.0, theta=1.0, impl=impl,
+    )
+    return np.asarray(scores, dtype=np.float64)

@@ -155,17 +155,13 @@ def simulate(
             arrival[agent.spec.job_id] = now
 
         elif kind == _TICK:
-            # "This cycle repeats continuously" (paper §3): run iterations
-            # back-to-back until no further window clears, bounded per tick.
-            budget = 3 * max(len(scheduler.slices), 1)
-            while budget > 0:
-                budget -= 1
-                iterations += 1
-                result = scheduler.step(now)
-                if result is None:
-                    break  # no more announceable windows this tick
-                if result.selected:
-                    pending.extend(result.selected)
+            # "This cycle repeats continuously" (paper §3): one batched
+            # auction round clears ALL open windows across all slices —
+            # replacing the former 3 × n_slices sequential step() loop.
+            iterations += 1
+            rr = scheduler.run_round(now)
+            if rr is not None and rr.selected:
+                pending.extend(rr.selected)
             # launch any committed variants whose start has arrived
             still = []
             for v in pending:
@@ -245,7 +241,10 @@ def simulate(
         per_slice_utilization=per_slice,
         mean_jct=float(np.nanmean(jcts)),
         p95_jct=float(np.nanpercentile(jcts, 95)),
-        makespan=float(max(jct.values())) if jct else float("nan"),
+        # makespan = last completion − first arrival (NOT the largest per-job
+        # JCT, which under-reports whenever the longest-running job arrived
+        # after the first one)
+        makespan=float(t_last - t_first) if jct else float("nan"),
         jain_slowdown=jain_index(slowdowns) if slowdowns else 1.0,
         n_finished=len(jct),
         n_jobs=len(agents),

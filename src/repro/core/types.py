@@ -173,6 +173,27 @@ class ClearingResult:
     rejected: Sequence[Variant] = ()
 
 
+@dataclass
+class RoundResult:
+    """Output of one batched auction ROUND over all announced windows.
+
+    ``results[i]`` is the per-window clearing outcome for ``windows[i]``
+    after cross-window conflict resolution; ``selected``/``scores`` are the
+    flattened winners across every window (the commit set).  ``n_conflicts``
+    counts wins revoked because a job won overlapping intervals on several
+    slices (or more work than it had) and kept only its best-scored wins.
+    """
+
+    windows: Sequence[Window]
+    results: Sequence["ClearingResult"]
+    selected: Sequence[Variant]
+    scores: Sequence[float]
+    total_score: float
+    n_bids: int
+    n_bidders: int = 0
+    n_conflicts: int = 0
+
+
 # ---------------------------------------------------------------------------
 # Struct-of-arrays view for vectorized scoring / WIS (JAX + Pallas paths)
 # ---------------------------------------------------------------------------

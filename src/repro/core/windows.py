@@ -1,29 +1,47 @@
-"""Window derivation and announcement policies (paper §3.1, §5.1(c)).
+"""Window derivation and announcement (paper §3.1, §5.1(c)) — round model.
 
 The scheduler maintains a per-slice time–capacity map (committed execution
-intervals) and derives contiguous idle gaps.  Each JASDA iteration announces
-ONE window w* = (s_k, c_k, t_min, Δt) chosen by a pluggable policy:
+intervals) and derives contiguous idle gaps.  One **auction round** announces
+ALL eligible gaps across all slices at once (:func:`announce_windows`); the
+``WindowPolicy`` kinds are *orderings* over that set rather than single
+picks:
 
-* ``earliest``   — earliest start time (the paper prototype's default,
+* ``earliest``   — earliest start time first (the paper prototype's default,
                    "minimizing latency between announcement and generation").
 * ``largest``    — largest gap first (fragmentation-averse).
-* ``best_fit``   — smallest gap that still admits τ_min work (packs tight
-                   gaps before they expire).
-* ``slack``      — gap whose slice has the most idle fraction in the horizon.
+* ``best_fit``   — smallest gap that still admits τ_min work first (packs
+                   tight gaps before they expire).
+* ``slack``      — gaps on the idlest slice in the horizon first.
+
+:func:`announce_window` (the legacy single-window API, paper A3: one w* per
+iteration) is kept as the head of the same ordering and backs the
+scheduler's ``step()`` compatibility wrapper.
 
 Window announcement respects a preparation offset (§5.1(a) mitigation (i)):
 announced windows start at least ``announce_offset`` after "now" so jobs have
 time to generate variants.
+
+Announced-but-unfilled windows are suppressed for a cooldown via
+:class:`DeadWindowRegistry`, which matches window starts with an epsilon
+tolerance — releases and early finishes perturb gap boundaries by float
+drift, and an exact (slice_id, t_min) key would resurrect a dead window the
+moment its start moved by 1e-12.
 """
 from __future__ import annotations
 
 import bisect
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
 
 from .types import SliceSpec, Window
 
-__all__ = ["SliceTimeline", "WindowPolicy", "announce_window"]
+__all__ = [
+    "SliceTimeline",
+    "WindowPolicy",
+    "DeadWindowRegistry",
+    "announce_window",
+    "announce_windows",
+]
 
 
 class SliceTimeline:
@@ -117,41 +135,111 @@ class WindowPolicy:
     min_gap: float = 1.0  # don't announce gaps shorter than this (≈ τ_min)
 
 
+class DeadWindowRegistry:
+    """Announced-but-unfilled windows suppressed until a cooldown expires.
+
+    Matching is epsilon-tolerant on the window start: a gap whose boundary
+    drifted by float noise (release / early finish / re-merge) is still the
+    same dead window.
+    """
+
+    def __init__(self, eps: float = 1e-6):
+        self.eps = eps
+        # slice_id -> [(t_min, expiry)]
+        self._entries: Dict[str, List[Tuple[float, float]]] = {}
+
+    def add(self, slice_id: str, t_min: float, expiry: float) -> None:
+        entries = self._entries.setdefault(slice_id, [])
+        for i, (t, _) in enumerate(entries):
+            if abs(t - t_min) <= self.eps:
+                entries[i] = (t, max(entries[i][1], expiry))
+                return
+        entries.append((t_min, expiry))
+
+    def prune(self, now: float) -> None:
+        for sid in list(self._entries):
+            kept = [(t, e) for t, e in self._entries[sid] if e > now]
+            if kept:
+                self._entries[sid] = kept
+            else:
+                del self._entries[sid]
+
+    def suppressed(self, slice_id: str, t_min: float) -> bool:
+        return any(
+            abs(t - t_min) <= self.eps for t, _ in self._entries.get(slice_id, ())
+        )
+
+    def __len__(self) -> int:
+        return sum(len(v) for v in self._entries.values())
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+
+ExcludeLike = Union[None, DeadWindowRegistry, Set[Tuple[str, float]]]
+
+
+def _is_excluded(exclude: ExcludeLike, slice_id: str, t_min: float) -> bool:
+    if exclude is None:
+        return False
+    if isinstance(exclude, DeadWindowRegistry):
+        return exclude.suppressed(slice_id, t_min)
+    # legacy float-keyed set (kept for external callers)
+    return (slice_id, round(t_min, 9)) in exclude
+
+
+def announce_windows(
+    slices: Dict[str, SliceTimeline],
+    now: float,
+    policy: WindowPolicy,
+    *,
+    exclude: ExcludeLike = None,
+) -> List[Window]:
+    """All eligible windows for this round, ordered by the policy key.
+
+    Every idle gap of at least ``min_gap`` across every slice within the
+    horizon becomes a window; the ``policy.kind`` determines the *order* the
+    windows are presented in (ties broken by start time, then slice id, so
+    the ordering is deterministic across runs).
+    """
+    t0 = now + policy.announce_offset
+    candidates: List[Tuple[tuple, Window]] = []  # (policy key, window)
+    for sid in sorted(slices):
+        tl = slices[sid]
+        idle = None  # lazily computed once per slice for the "slack" kind
+        for s, e in tl.gaps(t0, policy.horizon):
+            if e - s < policy.min_gap:
+                continue
+            if _is_excluded(exclude, sid, s):
+                continue
+            if policy.kind == "earliest":
+                key = (s, -(e - s), sid)
+            elif policy.kind == "largest":
+                key = (-(e - s), s, sid)
+            elif policy.kind == "best_fit":
+                key = (e - s, s, sid)
+            elif policy.kind == "slack":
+                if idle is None:
+                    idle = tl.idle_fraction(t0, policy.horizon)
+                key = (-idle, s, sid)
+            else:
+                raise ValueError(f"unknown window policy {policy.kind}")
+            w = Window(slice_id=sid, capacity=tl.spec.capacity_bytes, t_min=s, duration=e - s)
+            candidates.append((key, w))
+    candidates.sort(key=lambda c: c[0])
+    return [w for _, w in candidates]
+
+
 def announce_window(
     slices: Dict[str, SliceTimeline],
     now: float,
     policy: WindowPolicy,
     *,
-    exclude: Optional[set] = None,
+    exclude: ExcludeLike = None,
 ) -> Optional[Window]:
-    """Pick ONE window to announce this iteration (A3: one w* per iteration).
+    """Pick ONE window (legacy A3 semantics): head of the round ordering.
 
     Returns None when no gap of at least ``min_gap`` exists in the horizon.
-    ``exclude`` suppresses windows already announced and left unfilled this
-    round-robin pass (avoids re-announcing a dead window forever).
     """
-    exclude = exclude or set()
-    t0 = now + policy.announce_offset
-    candidates: List[Tuple[Window, float]] = []  # (window, policy key)
-    for sid, tl in slices.items():
-        for s, e in tl.gaps(t0, policy.horizon):
-            if e - s < policy.min_gap:
-                continue
-            w = Window(slice_id=sid, capacity=tl.spec.capacity_bytes, t_min=s, duration=e - s)
-            if (sid, round(s, 9)) in exclude:
-                continue
-            if policy.kind == "earliest":
-                key = (s, -(e - s))
-            elif policy.kind == "largest":
-                key = (-(e - s), s)
-            elif policy.kind == "best_fit":
-                key = (e - s, s)
-            elif policy.kind == "slack":
-                key = (-tl.idle_fraction(t0, policy.horizon), s)
-            else:
-                raise ValueError(f"unknown window policy {policy.kind}")
-            candidates.append((w, key))
-    if not candidates:
-        return None
-    candidates.sort(key=lambda c: c[1])
-    return candidates[0][0]
+    ws = announce_windows(slices, now, policy, exclude=exclude)
+    return ws[0] if ws else None

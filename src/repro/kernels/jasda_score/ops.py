@@ -6,6 +6,7 @@ sizes, then calls the Pallas kernel (TPU / interpret) or the jnp reference.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional, Tuple
 
 import jax
@@ -16,7 +17,7 @@ from ..common import use_interpret
 from .kernel import score_variants_pallas
 from .ref import score_variants_reference
 
-__all__ = ["score_variants", "pool_to_arrays"]
+__all__ = ["score_variants", "pool_to_arrays", "pool_to_arrays_round"]
 
 
 def _pad_rows(x: jnp.ndarray, m_pad: int, fill: float = 0.0) -> jnp.ndarray:
@@ -72,6 +73,19 @@ def score_variants(
     return score[:m], elig[:m], None
 
 
+def _pack_job_features(variants, policy, dtype=np.float32):
+    """Declared job features + α vector in the (jct, qos, progress) order the
+    kernel contract fixes — single source of truth for both packing paths."""
+    fj = np.zeros((len(variants), 3), dtype)
+    for i, v in enumerate(variants):
+        d = v.declared_features
+        fj[i] = [d.get("jct", 0.0), d.get("qos", 0.0), d.get("progress", 0.0)]
+    alphas = np.array(
+        [policy.alphas.get("jct", 0.0), policy.alphas.get("qos", 0.0),
+         policy.alphas.get("progress", 0.0)], dtype)
+    return fj, alphas
+
+
 def pool_to_arrays(
     variants,
     window,
@@ -86,21 +100,108 @@ def pool_to_arrays(
     the caller when known).
     """
     m = len(variants)
-    fj = np.zeros((m, 3), np.float32)
+    fj, alphas = _pack_job_features(variants, policy)
     fs = np.zeros((m, 3), np.float32)
     mu = np.zeros((m, grid), np.float32)
     sg = np.zeros((m, grid), np.float32)
     for i, v in enumerate(variants):
-        d = v.declared_features
-        fj[i] = [d.get("jct", 0.0), d.get("qos", 0.0), d.get("progress", 0.0)]
         util = min(1.0, v.duration / max(window.duration, 1e-9))
         lead = max(0.0, (v.t_start - window.t_min) / max(window.duration, 1e-9))
         fs[i] = [util, 1.0 - lead, 0.0]
         mu[i], sg[i] = v.fmp.grid(grid)
-    alphas = np.array(
-        [policy.alphas.get("jct", 0.0), policy.alphas.get("qos", 0.0),
-         policy.alphas.get("progress", 0.0)], np.float32)
     betas = np.array(
         [policy.betas.get("utilization", 0.0), policy.betas.get("slack", 0.0),
          policy.betas.get("age", 0.0)], np.float32)
+    return fj, fs, alphas, betas, mu, sg
+
+
+# ---------------------------------------------------------------------------
+# Round packing: the union of every window's bids in ONE struct-of-arrays
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=4096)
+def _fmp_mean_mu(fmp, grid: int) -> float:
+    """mean_t mu(t) of a (hashable, frozen) FMP — the only grid statistic
+    ψ_mem_headroom needs, so a round over thousands of variants sharing a few
+    job FMPs touches each grid once."""
+    mu, _ = fmp.grid(grid)
+    return float(np.mean(mu))
+
+
+def pool_to_arrays_round(
+    variants,
+    windows,
+    win_idx,
+    policy,
+    *,
+    h=None,
+    ages=None,
+    grid: int = 32,
+    pack_grids: bool = False,
+):
+    """Pack a pooled ROUND of bids for one batched scoring dispatch.
+
+    Each variant is scored against ITS OWN window (``win_idx[i]`` indexes
+    ``windows``).  System features mirror ``scoring.score_pool`` exactly:
+    [utilization, slack, mem_headroom, age], so the batched call reproduces
+    the per-window numpy path.
+
+    ``h`` (optional, (M,)) is the pre-calibrated job utility ĥ(v); when given
+    the job side collapses to a single feature column with α = [1.0], which
+    is how the round path injects §4.2.1 calibration without a per-variant
+    device round-trip.  ``pack_grids=False`` skips the (M, T) FMP grids (the
+    in-kernel safety recheck is a no-op when generation already enforced
+    condition (a)); pass True to re-verify with a caller-chosen θ.
+
+    Features stay float64 on the host so the small-pool numpy scoring path
+    ranks variants exactly like the legacy per-window path even on near-ties;
+    the jnp/Pallas dispatch (ops.score_variants) downcasts to float32 at the
+    device boundary.
+    """
+    m = len(variants)
+    w_tmin = np.asarray([w.t_min for w in windows], np.float64)[win_idx]
+    w_dur = np.asarray([max(w.duration, 1e-9) for w in windows], np.float64)[win_idx]
+    w_cap = np.asarray([w.capacity for w in windows], np.float64)[win_idx]
+
+    t_start = np.fromiter((v.t_start for v in variants), np.float64, m)
+    dur = np.fromiter((v.duration for v in variants), np.float64, m)
+    util = np.clip(dur / w_dur, 0.0, 1.0)
+    slack = np.clip(1.0 - (t_start - w_tmin) / w_dur, 0.0, 1.0)
+    mean_mu = np.fromiter(
+        (_fmp_mean_mu(v.fmp, grid) for v in variants), np.float64, m
+    )
+    with np.errstate(divide="ignore", invalid="ignore"):
+        headroom = np.where(
+            w_cap > 0, np.clip(1.0 - mean_mu / np.where(w_cap > 0, w_cap, 1.0), 0.0, 1.0), 0.0
+        )
+    if ages:
+        age = np.fromiter(
+            (np.clip(ages.get(v.job_id, 0.0), 0.0, 1.0) for v in variants),
+            np.float64, m,
+        )
+    else:
+        age = np.zeros(m, np.float64)
+    fs = np.stack([util, slack, headroom, age], axis=1)
+    betas = np.array(
+        [policy.betas.get("utilization", 0.0), policy.betas.get("slack", 0.0),
+         policy.betas.get("mem_headroom", 0.0), policy.betas.get("age", 0.0)],
+        np.float64)
+
+    if h is not None:
+        fj = np.asarray(h, np.float64)[:, None]
+        alphas = np.array([1.0], np.float64)
+    else:
+        fj, alphas = _pack_job_features(variants, policy, dtype=np.float64)
+
+    if pack_grids:
+        mu = np.zeros((m, grid), np.float32)
+        sg = np.zeros((m, grid), np.float32)
+        for i, v in enumerate(variants):
+            mu[i], sg[i] = v.fmp.grid(grid)
+    else:
+        # sigma=0 with mu=0 <= capacity is deterministically safe: the
+        # kernel's eligibility mask becomes a no-op, as intended
+        mu = np.zeros((m, 1), np.float32)
+        sg = np.zeros((m, 1), np.float32)
     return fj, fs, alphas, betas, mu, sg

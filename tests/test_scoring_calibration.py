@@ -1,6 +1,7 @@
 """Scoring model (Eqs. 1–4) + calibration/verification (§4.2.1)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.calibration import (CalibrationConfig, Calibrator,

@@ -1,6 +1,7 @@
 """TRP/FMP: safety evaluators vs Monte-Carlo ground truth (paper §4.1a)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.trp import (PhaseFMP, Phase, fmp_from_model, fmp_standard,

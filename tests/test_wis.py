@@ -1,6 +1,7 @@
 """WIS clearing: optimality (vs brute force), Table 3, path agreement."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.wis import wis_brute_force, wis_select, wis_select_jax
