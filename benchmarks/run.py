@@ -10,7 +10,11 @@ quantitative study.  Prints ``name,us_per_call,derived`` CSV rows.
   window_policies        §5.1(c): announcement-policy ablation
   atomization_ft         SJA thesis: work lost under failures vs monolithic
   round_throughput       round-batched clearing vs the single-window loop
-                         (bids cleared/sec vs pool size — the tentpole claim)
+                         (bids cleared/sec vs pool size — the PR 1 tentpole)
+  score_dispatch         zero-recompile scoring: per-round latency + retrace
+                         count across drifting M / λ / heterogeneous capacities
+  pipeline_overlap       double-buffered round pipelining vs serial clearing
+                         (host pack/WIS overlapped with device scoring)
   kernels                per-kernel µs/call (CPU interpret / reference paths)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick]
@@ -21,10 +25,27 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
 import time
 from typing import Callable, Dict, List
 
 import numpy as np
+
+
+def _pin_xla_cpu_threads() -> None:
+    """Single-thread XLA's CPU compute pool (before jax is first imported).
+
+    On small CI boxes (2 cores) multi-threaded eigen fights the host python
+    thread for every core, which turns the pipeline_overlap measurement into
+    contention noise.  Pinning gives the host and the in-flight scoring
+    stream one core each — the same separation a real host+TPU deployment
+    has.  No-op if jax is already loaded or a TPU platform is requested.
+    """
+    if "jax" in sys.modules or "tpu" in os.environ.get("JAX_PLATFORMS", ""):
+        return
+    extra = "--xla_cpu_multi_thread_eigen=false intra_op_parallelism_threads=1"
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") + " " + extra).strip()
 
 ROWS: List[dict] = []
 QUICK = False
@@ -279,7 +300,7 @@ def bench_round_throughput():
         return pool, ages
 
     sizes = (64, 256) if QUICK else (64, 256, 1024)
-    reps = 3 if QUICK else 5
+    reps = 5 if QUICK else 7
     for m in sizes:
         pool, ages = make_pool(m)
 
@@ -299,12 +320,182 @@ def bench_round_throughput():
             f"round/legacy selections diverged at M={m}: {sel_round} vs {sel_legacy}"
         )
 
-        us_l = _time(legacy, n=reps)
-        us_r = _time(batched, n=reps)
+        # ABBA-paired minima (see pipeline_overlap): sandboxed CI jitter
+        # inflates samples multiplicatively, so the fastest observed run of
+        # each path is the faithful comparison
+        us_l_r, us_r_r = [], []
+        for i in range(reps):
+            first, second = (legacy, batched) if i % 2 == 0 else (batched, legacy)
+            a = _time(first, n=1, warmup=0)
+            b = _time(second, n=1, warmup=0)
+            l, r = (a, b) if i % 2 == 0 else (b, a)
+            us_l_r.append(l)
+            us_r_r.append(r)
+        us_l, us_r = min(us_l_r), min(us_r_r)
         speedup = us_l / max(us_r, 1e-9)
         emit(f"round_throughput_M{m}", us_r,
              f"bids/s={m / (us_r / 1e6):.0f} single_window_us={us_l:.0f} "
              f"speedup={speedup:.2f}x identical_selections={identical}")
+
+
+# ---------------------------------------------------------------------------
+# zero-recompile scoring dispatch: runtime (λ, capacity, θ) + M-bucketing
+# ---------------------------------------------------------------------------
+
+def bench_score_dispatch():
+    """Per-round dispatch latency + retrace count across drifting shapes.
+
+    Runs ≥8 consecutive rounds with varying pool sizes, λ values and
+    heterogeneous per-window capacities/θ.  Because λ/capacity/θ are traced
+    runtime operands and M pads to power-of-two buckets, the jit cache must
+    be hit on EVERY round after the per-bucket warmup — the bench asserts
+    ZERO retraces (one compiled executable per M-bucket) and emits the
+    per-round latency.
+    """
+    import jax
+    from repro.kernels.jasda_score import ops
+
+    rng = np.random.default_rng(3)
+    t = 32
+    impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+
+    def make_args(m):
+        fj = rng.uniform(0, 1, (m, 3)).astype(np.float32)
+        fs = rng.uniform(0, 1, (m, 3)).astype(np.float32)
+        al = np.array([.5, .3, .2], np.float32)
+        be = np.array([.4, .2, .2], np.float32)
+        mu = rng.uniform(5, 19, (m, t)).astype(np.float32)
+        sg = rng.uniform(0.01, .5, (m, t)).astype(np.float32)
+        caps = rng.choice([12.0, 16.0, 20.0, 24.0], m)  # heterogeneous slices
+        ths = rng.choice([0.02, 0.05, 0.1], m)
+        return fj, fs, al, be, mu, sg, caps, ths
+
+    def dispatch(args, lam):
+        fj, fs, al, be, mu, sg, caps, ths = args
+        s, e, _ = ops.score_variants(fj, fs, al, be, mu, sg, lam=lam,
+                                     capacity=caps, theta=ths, impl=impl)
+        np.asarray(s)  # block: measure completed rounds, not dispatch alone
+
+    # drifting pool sizes (λ varies every round, capacities every variant)
+    rounds = [(300, 0.30), (512, 0.50), (700, 0.70), (900, 0.40),
+              (1024, 0.60), (333, 0.55), (768, 0.45), (512, 0.35),
+              (1000, 0.50), (256, 0.65)]
+    buckets = sorted({ops.bucket_m(m) for m, _ in rounds})
+    for b in buckets:  # one-time compile per bucket
+        dispatch(make_args(b), 0.5)
+
+    base = ops.trace_counts()
+    args_per_round = [make_args(m) for m, _ in rounds]
+    for i, ((m, lam), args) in enumerate(zip(rounds, args_per_round)):
+        # min over reps: sandbox jitter only inflates samples
+        us = min(_time(lambda a=args, l=lam: dispatch(a, l), n=1, warmup=0)
+                 for _ in range(3 if QUICK else 5))
+        emit(f"score_dispatch_r{i}_M{m}", us,
+             f"bucket={ops.bucket_m(m)} lam={lam} hetero_caps=4 impl={impl}")
+    delta = {k: ops.trace_counts()[k] - base[k] for k in base}
+    retraces = sum(delta.values())
+    # the tentpole claim: fail CI loudly if the cache is ever missed again
+    assert retraces == 0, f"scoring dispatch retraced: {delta}"
+    emit("score_dispatch_retraces", 0.0,
+         f"rounds={len(rounds)} retraces=0 executables={len(buckets)} "
+         f"buckets={buckets}")
+
+
+# ---------------------------------------------------------------------------
+# round pipelining: host pack/clear overlapped with in-flight device scoring
+# ---------------------------------------------------------------------------
+
+def bench_pipeline_overlap():
+    """Pipelined vs serial wall-clock over a stream of scoring rounds.
+
+    Streams K independent rounds (8 windows, M pooled bids each, FMP grids
+    packed so the in-flight dispatch carries real per-variant safety work)
+    through ``pipelined_clear_rounds`` and through serial ``clear_round``
+    calls.  Selections are asserted byte-identical; the speedup is pure
+    overlap of round k+1's host packing + round k-1's WIS clearing with
+    round k's device scoring.
+    """
+    from repro.core import ScoringPolicy, Window, clear_round
+    from repro.core.pipeline import pipelined_clear_rounds
+    from repro.core.trp import fmp_standard
+    from repro.core.types import Variant
+    from repro.kernels.jasda_score.ops import FMPGridCache
+
+    GB = 1 << 30
+    policy = ScoringPolicy()
+    rng = np.random.default_rng(11)
+    n_windows = 8
+    windows = [
+        Window(slice_id=f"s{k}", capacity=(10 + 2 * k) * GB,
+               t_min=300.0 * k, duration=200.0)
+        for k in range(n_windows)
+    ]
+
+    def make_round(m):
+        n_jobs = max(8, m // 16)
+        fmps = [fmp_standard(1 * GB, (1.5 + 2.5 * rng.uniform()) * GB, 0.2 * GB)
+                for _ in range(n_jobs)]
+        pool = []
+        for i in range(m):
+            j = i % n_jobs
+            w = windows[rng.integers(0, n_windows)]
+            t0 = w.t_min + rng.uniform(0, w.duration * 0.7)
+            dur = rng.uniform(2.0, (w.t_min + w.duration - t0))
+            pool.append(Variant(
+                job_id=f"J{j}", slice_id=w.slice_id, t_start=t0, duration=dur,
+                fmp=fmps[j], local_utility=float(rng.uniform(0.1, 0.9)),
+                declared_features={}, payload={"work": dur},
+                variant_id=f"J{j}/v{i}"))
+        return windows, pool
+
+    sizes = (2048,) if QUICK else (2048, 4096)
+    n_rounds = 8
+    reps = 7
+    for m in sizes:
+        rounds = [make_round(m) for _ in range(n_rounds)]
+        cache = FMPGridCache(maxsize=4096)
+        # the production kernel path (Pallas; interpret-lowered off-TPU) with
+        # grids packed at the TRP default resolution: the in-flight dispatch
+        # carries the full (M, T) per-variant-capacity safety reduction
+        kw = dict(score_impl="pallas", recheck_theta=0.5, grid=64,
+                  grid_cache=cache)
+
+        def serial():
+            return [clear_round(w, p, policy, **kw) for w, p in rounds]
+
+        def piped():
+            return pipelined_clear_rounds(rounds, policy, **kw)
+
+        sel_s = [[tuple(v.variant_id for v in r.selected) for r in rr.results]
+                 for rr in serial()]
+        sel_p = [[tuple(v.variant_id for v in r.selected) for r in rr.results]
+                 for rr in piped()]
+        assert sel_s == sel_p, f"pipelined selections diverged at M={m}"
+
+        # paired reps in ABBA order, median of per-pair ratios: sandboxed CI
+        # kernels add heavy multiplicative jitter that adjacent samples
+        # share (the ratio cancels it), alternating the order cancels the
+        # slow load-dependent drift, and the median rejects unpaired spikes
+        ts_r, tp_r = [], []
+        for i in range(reps):
+            first, second = (serial, piped) if i % 2 == 0 else (piped, serial)
+            a = _time(first, n=1, warmup=0)
+            b = _time(second, n=1, warmup=0)
+            s, p = (a, b) if i % 2 == 0 else (b, a)
+            ts_r.append(s)
+            tp_r.append(p)
+            time.sleep(0.05)  # let the sandbox scheduler settle between pairs
+        ratios = sorted(p / max(s, 1e-9) for s, p in zip(ts_r, tp_r))
+        med_ratio = ratios[len(ratios) // 2]
+        ts, tp = min(ts_r), min(tp_r)
+        # min/min is the headline ratio: sandbox noise only ever INFLATES a
+        # sample, so the fastest observed run of each variant is the faithful
+        # capability comparison; the median pair ratio stays as a noise gauge
+        ratio = tp / max(ts, 1e-9)
+        emit(f"pipeline_overlap_M{m}", tp,
+             f"serial_us={ts:.0f} ratio={ratio:.2f} "
+             f"median_pair_ratio={med_ratio:.2f} rounds={n_rounds} "
+             f"reps={reps} identical_selections=True")
 
 
 # ---------------------------------------------------------------------------
@@ -364,15 +555,19 @@ BENCHES: Dict[str, Callable] = {
     "window_policies": bench_window_policies,
     "atomization_ft": bench_atomization_ft,
     "round_throughput": bench_round_throughput,
+    "score_dispatch": bench_score_dispatch,
+    "pipeline_overlap": bench_pipeline_overlap,
     "kernels": bench_kernels,
 }
 
 # CI smoke subset: fast, no multi-minute simulator sweeps
-QUICK_BENCHES = ("table3_clearing", "round_throughput", "kernels")
+QUICK_BENCHES = ("table3_clearing", "round_throughput", "score_dispatch",
+                 "pipeline_overlap", "kernels")
 
 
 def main() -> None:
     global QUICK
+    _pin_xla_cpu_threads()
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--quick", action="store_true",

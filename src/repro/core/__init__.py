@@ -16,6 +16,7 @@ from .types import (  # noqa: F401
     Commitment,
     JobSpec,
     JobState,
+    PoolView,
     RoundResult,
     SliceSpec,
     Variant,
@@ -37,10 +38,12 @@ from .scoring import (  # noqa: F401
     POLICY_BALANCED,
     POLICY_QOS_FIRST,
     POLICY_UTILIZATION_FIRST,
+    ScoreHandle,
     ScoringPolicy,
     composite_score,
     score_pool,
     score_round,
+    score_round_async,
 )
 from .wis import wis_brute_force, wis_select, wis_select_jax  # noqa: F401
 from .calibration import CalibrationConfig, Calibrator, per_variant_error, reliability  # noqa: F401
@@ -54,8 +57,9 @@ from .windows import (  # noqa: F401
 )
 from .atomizer import AtomizerConfig, ChunkPlan, chunk_candidates  # noqa: F401
 from .jobs import AgentConfig, JobAgent  # noqa: F401
-from .clearing import clear_round, clear_window  # noqa: F401
-from .scheduler import JasdaScheduler, SchedulerConfig  # noqa: F401
+from .clearing import assign_bids, clear_round, clear_window, settle_round  # noqa: F401
+from .scheduler import CommitRecord, JasdaScheduler, SchedulerConfig  # noqa: F401
+from .pipeline import RoundPipeline, pipelined_clear_rounds  # noqa: F401
 from .simulator import SimConfig, SimResult, make_workload, simulate  # noqa: F401
 from .baselines import (  # noqa: F401
     AuctionScheduler,

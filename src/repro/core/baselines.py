@@ -49,7 +49,10 @@ class MonolithicScheduler:
             s.slice_id: SliceTimeline(s) for s in slices
         }
         self.agents: Dict[str, JobAgent] = {}
-        self.commitments: List[Commitment] = []
+        self.commitments: List[Commitment] = []  # outstanding only
+        # running totals (simulator metrics): commitments prune on settle
+        self.n_committed_total: int = 0
+        self.committed_score_total: float = 0.0
         self.retired_intervals: Dict[str, List] = {}
         self._queue: List[str] = []  # arrival order
         self.theta = theta
@@ -188,6 +191,8 @@ class MonolithicScheduler:
     def _commit(self, v: Variant, now: float, score: float = 0.0) -> None:
         self.slices[v.slice_id].commit(v.t_start, v.t_end)
         self.commitments.append(Commitment(variant=v, commit_time=now, score=score))
+        self.n_committed_total += 1
+        self.committed_score_total += float(score)
 
     def _free_at(self, sid: str, now: float) -> bool:
         tl = self.slices[sid]

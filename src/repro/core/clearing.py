@@ -29,11 +29,11 @@ from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .scoring import ScoringPolicy, score_pool, score_round
-from .types import ClearingResult, RoundResult, Variant, Window
+from .scoring import ScoringPolicy, score_pool, score_round_async
+from .types import ClearingResult, PoolView, RoundResult, Variant, Window
 from .wis import wis_select
 
-__all__ = ["clear_window", "clear_round"]
+__all__ = ["clear_window", "clear_round", "assign_bids", "settle_round"]
 
 
 def clear_window(
@@ -90,6 +90,56 @@ def _overlap(a: Variant, b: Variant, eps: float = 1e-12) -> bool:
     return a.t_start < b.t_end - eps and b.t_start < a.t_end - eps
 
 
+def assign_bids(
+    windows: Sequence[Window],
+    variants: Sequence[Variant],
+    view: Optional[PoolView] = None,
+) -> Tuple[List[Variant], np.ndarray, PoolView]:
+    """Assign each pooled bid to the (unique) window containing it.
+
+    Windows on one slice are disjoint idle gaps, so a variant fits at most
+    one; first-fit in window order keeps the assignment deterministic.
+    Vectorized over the pool: builds (or reuses) a :class:`PoolView` and
+    tests containment per window with numpy masks instead of a
+    per-variant python loop.  Returns ``(fit, win_idx, fit_view)`` — the
+    fitting subset in pool order, the window index each bid targets, and
+    the aligned struct-of-arrays view the downstream pack/WIS stages reuse.
+    """
+    if view is None:
+        view = PoolView.build(variants)
+    m = len(view)
+    if m == 0:
+        return [], np.zeros(0, np.intp), view
+    slice_code = {w.slice_id: None for w in windows}
+    for i, sid in enumerate(slice_code):
+        slice_code[sid] = i
+    codes = np.asarray(
+        [slice_code.get(s, -1) for s in view.slice_ids], np.intp
+    )
+    eps = 1e-9
+    assigned = np.full(m, -1, np.intp)
+    for k, w in enumerate(windows):
+        mask = (
+            (assigned < 0)
+            & (codes == slice_code[w.slice_id])
+            & (view.t_start >= w.t_min - eps)
+            & (view.t_end <= w.t_end + eps)
+            & (view.duration > 0)
+        )
+        assigned[mask] = k
+    fit_idx = np.nonzero(assigned >= 0)[0]
+    fit_view = view.take(fit_idx)
+    return fit_view.variants, assigned[fit_idx], fit_view
+
+
+def _empty_round(windows: Sequence[Window]) -> RoundResult:
+    empty = [
+        ClearingResult(window=w, selected=(), scores=(), total_score=0.0, n_bids=0)
+        for w in windows
+    ]
+    return RoundResult(tuple(windows), tuple(empty), (), (), 0.0, 0)
+
+
 def clear_round(
     windows: Sequence[Window],
     variants: Sequence[Variant],
@@ -100,6 +150,9 @@ def clear_round(
     selector: Callable = wis_select,
     work_budget: Optional[Mapping[str, float]] = None,
     score_impl: Optional[str] = None,
+    recheck_theta: Optional[float] = None,
+    grid: int = 32,
+    grid_cache=None,
 ) -> RoundResult:
     """Clear one batched auction round over ALL announced windows.
 
@@ -111,36 +164,59 @@ def clear_round(
     that lose a winner are re-cleared against their remaining candidates
     within the round, iterating to a fixed point.
 
+    ``recheck_theta`` re-verifies safety condition (a) in-dispatch against
+    each bid's own window capacity (scoring.score_round); ``grid_cache``
+    reuses FMP grid discretizations across rounds.  The dispatch/settle
+    halves are exposed separately (:func:`assign_bids`, scoring's
+    ``score_round_async``, :func:`settle_round`) so the round pipeline can
+    overlap them across consecutive rounds.
+
     Returns a :class:`RoundResult`; ``results`` aligns with ``windows``.
     """
     windows = list(windows)
     if not windows:
         return RoundResult((), (), (), (), 0.0, 0)
 
-    # -- assign each pooled bid to the (unique) window containing it ----------
-    by_slice: Dict[str, List[int]] = {}
-    for k, w in enumerate(windows):
-        by_slice.setdefault(w.slice_id, []).append(k)
-    fit: List[Variant] = []
-    win_idx: List[int] = []
-    for v in variants:
-        for k in by_slice.get(v.slice_id, ()):
-            if _fits(v, windows[k]):
-                fit.append(v)
-                win_idx.append(k)
-                break
+    fit, win_idx, fit_view = assign_bids(windows, variants)
     if not fit:
-        empty = [
-            ClearingResult(window=w, selected=(), scores=(), total_score=0.0, n_bids=0)
-            for w in windows
-        ]
-        return RoundResult(tuple(windows), tuple(empty), (), (), 0.0, 0)
+        return _empty_round(windows)
 
     # -- one batched scoring call over the pooled bids (lines 6–8) ------------
-    scores = score_round(
-        fit, windows, np.asarray(win_idx), policy,
+    handle = score_round_async(
+        fit, windows, win_idx, policy,
         ages=ages, calibrate=calibrate, impl=score_impl,
+        recheck_theta=recheck_theta, grid=grid, grid_cache=grid_cache,
+        view=fit_view,
     )
+    return settle_round(
+        windows, fit, win_idx, handle.result(),
+        selector=selector, work_budget=work_budget, view=fit_view,
+    )
+
+
+def settle_round(
+    windows: Sequence[Window],
+    fit: Sequence[Variant],
+    win_idx: Sequence[int],
+    scores: np.ndarray,
+    *,
+    selector: Callable = wis_select,
+    work_budget: Optional[Mapping[str, float]] = None,
+    view: Optional[PoolView] = None,
+) -> RoundResult:
+    """The post-scores half of :func:`clear_round`: WIS per window plus
+    cross-window conflict resolution to a fixed point (Algorithm 1 line 12
+    and step 12b).  Pure given its inputs; the pipeline calls it once the
+    in-flight scores of a dispatched round materialize.  ``view`` (the
+    struct-of-arrays form of ``fit`` from :func:`assign_bids`) lets the
+    per-window WIS passes gather interval arrays instead of re-walking the
+    variant objects.
+    """
+    windows = list(windows)
+    if not fit:
+        return _empty_round(windows)
+    if view is None:
+        view = PoolView.build(fit)
 
     members: List[List[int]] = [[] for _ in windows]  # window -> pool indices
     for i, k in enumerate(win_idx):
@@ -156,9 +232,8 @@ def clear_round(
         if not idx:
             selected_per_window[k] = []
             return
-        starts = np.array([fit[i].t_start for i in idx])
-        ends = np.array([fit[i].t_end for i in idx])
-        sel, _ = selector(starts, ends, scores[idx])
+        ia = np.asarray(idx, np.intp)
+        sel, _ = selector(view.t_start[ia], view.t_end[ia], scores[ia])
         selected_per_window[k] = [idx[int(j)] for j in np.asarray(sel)]
 
     # fixed point: each pass bans ≥ 1 variant or terminates, so the loop is

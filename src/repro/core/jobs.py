@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Mapping, Optional, Sequence
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -65,7 +65,6 @@ class JobAgent:
         self.work_done: float = 0.0
         self.n_bids = 0
         self.n_wins = 0
-        self._variant_seq = 0
         # outstanding commitments: work already won but not yet executed, and
         # the time intervals it occupies (a job is a sequential subjob stream
         # — it must never hold two overlapping intervals, even across slices)
@@ -132,6 +131,21 @@ class JobAgent:
             self._safety_cache[capacity] = hit
         return hit
 
+    # -- speculative-bid support (core/pipeline.py) ----------------------------
+    def stats_snapshot(self) -> int:
+        """The one counter speculative bid generation mutates: ``n_bids``.
+
+        Variant ids are deterministic per (window, chain position) — see
+        :meth:`_make_variant` — so generation itself is replayable.  Nothing
+        else may be snapshotted here: the snapshot is taken BEFORE the
+        in-flight round settles, and settle legitimately bumps ``n_wins`` —
+        a wider rollback would erase it.
+        """
+        return self.n_bids
+
+    def stats_restore(self, snap: int) -> None:
+        self.n_bids = snap
+
     # -- the job side of one auction round (steps 2–3) -------------------------
     def generate_variants_round(
         self,
@@ -145,12 +159,33 @@ class JobAgent:
         overlapping time spans on different slices); the round clearing keeps
         at most one win per conflict.  ``n_chips`` maps slice_id → chip count.
         """
-        if self.finished or self.biddable_work <= 1e-9:
-            return []
         out: List[Variant] = []
+        for per_window in self.generate_variants_by_window(windows, now, n_chips):
+            out.extend(per_window)
+        return out
+
+    def generate_variants_by_window(
+        self,
+        windows: Sequence[Window],
+        now: float,
+        n_chips: Optional[Mapping[str, int]] = None,
+    ) -> List[List[Variant]]:
+        """Round bidding with per-window grouping (aligned with ``windows``).
+
+        The grouped form is what the round pipeline needs: when a
+        speculatively-announced window is invalidated (it died in the round
+        being settled), its bids are dropped wholesale without touching the
+        other windows' bids.  Generation per window is independent — a bid
+        built for window w fits only w (windows on one slice are disjoint
+        gaps), so dropping a group reproduces exactly the pool a fresh
+        announcement over the surviving windows would have produced.
+        """
+        if self.finished or self.biddable_work <= 1e-9:
+            return [[] for _ in windows]
+        out: List[List[Variant]] = []
         for w in windows:
             chips = n_chips.get(w.slice_id, 1) if n_chips else 1
-            out.extend(self.generate_variants(w, now, chips))
+            out.append(self.generate_variants(w, now, chips))
         return out
 
     # -- the job side of one JASDA iteration (steps 2–3, single window) --------
@@ -186,7 +221,9 @@ class JobAgent:
                     continue
                 if self._overlaps_own(t_cursor, plan.duration):
                     continue  # job already committed elsewhere in this span
-                variants.append(self._make_variant(window, t_cursor, plan, now))
+                variants.append(
+                    self._make_variant(window, t_cursor, plan, now, len(variants))
+                )
             largest = plans[0]
             remaining -= largest.work
             t_cursor += largest.duration
@@ -194,14 +231,21 @@ class JobAgent:
             self.n_bids += 1
         return variants
 
-    def _make_variant(self, window: Window, t_start: float, plan, now: float) -> Variant:
+    def _make_variant(
+        self, window: Window, t_start: float, plan, now: float, seq: int
+    ) -> Variant:
         feats = self._features(plan.work, plan.duration, t_start, now)
         declared = {
             k: float(np.clip(v * self.cfg.misreport, 0.0, 1.0))
             for k, v in feats.items()
         }
         h = sum(self.cfg.alphas.get(k, 0.0) * v for k, v in declared.items())
-        self._variant_seq += 1
+        # Deterministic id: (window, chain position) — NOT a global counter.
+        # Regenerating the same bid set (e.g. after a discarded speculative
+        # round in the pipeline) must yield identical ids; uniqueness holds
+        # within a round because a job bids each window at most once.
+        vid = (f"{self.spec.job_id}/{window.slice_id}"
+               f"@{window.t_min:.9g}#{seq}")
         return Variant(
             job_id=self.spec.job_id,
             slice_id=window.slice_id,
@@ -215,7 +259,7 @@ class JobAgent:
                 "activation": self.atomizer.activation_cost,
                 "true_features": feats,  # ground truth (≠ declared if misreporting)
             },
-            variant_id=f"{self.spec.job_id}/v{self._variant_seq}",
+            variant_id=vid,
         )
 
     # -- truthful feature values (what an honest job declares) ----------------

@@ -9,10 +9,26 @@ drives the paper's five-step cycle over ALL open capacity at once:
     cross-window conflict resolution                    (clearing.py, step 4)
   * commitment + bookkeeping + fairness/trust           (step 5)
 
+The round is split into a **prepare** half (announce + bid collection +
+packing + async scoring dispatch — :meth:`_prepare_round`) and a **settle**
+half (block on scores, WIS + conflicts, commit — :meth:`_settle_round`).
+``run_round`` composes them serially; :meth:`run_rounds_pipelined`
+double-buffers them across consecutive rounds (core/pipeline.py): while
+round k's scores are in flight on device, the host speculatively prepares
+round k+1, and an epoch counter (``_epoch``, bumped by every state
+mutation) guarantees a speculative preparation is only used when it is
+provably byte-identical to what a serial preparation would produce.
+
 The paper prototype's one-window-per-iteration loop (A3) survives as the
 thin :meth:`JasdaScheduler.step` compatibility wrapper — a round restricted
 to the single policy-preferred window — so external drivers (executor.py)
 and the equivalence tests keep working unchanged.
+
+Commitment bookkeeping is bounded: ``commitments`` holds only OUTSTANDING
+commitments (settled ones are pruned on :meth:`complete`/:meth:`fail`);
+the append-only ``commit_log`` keeps lightweight audit rows (no FMP/variant
+references) with running totals, optionally capped via
+``SchedulerConfig.max_log_rows`` together with the iteration ``log``.
 
 The scheduler is execution-agnostic: the simulator (simulator.py) and the
 real TPU executor (executor.py) both feed back observations through
@@ -28,15 +44,15 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .calibration import CalibrationConfig, Calibrator
-from .clearing import clear_round
+from .clearing import assign_bids, settle_round
 from .fairness import AgePolicy, AgeTracker
 from .jobs import JobAgent
-from .scoring import ScoringPolicy
+from .scoring import ScoringPolicy, score_round_async
 from .types import ClearingResult, Commitment, JobSpec, RoundResult, SliceSpec, Variant, Window
 from .windows import (DeadWindowRegistry, SliceTimeline, WindowPolicy,
                       announce_window, announce_windows)
 
-__all__ = ["JasdaScheduler", "SchedulerConfig"]
+__all__ = ["JasdaScheduler", "SchedulerConfig", "CommitRecord", "RoundPrep"]
 
 
 @dataclass(frozen=True)
@@ -52,8 +68,17 @@ class SchedulerConfig:
     # (float drift from releases/early finishes must not resurrect it)
     dead_window_eps: float = 1e-6
     # batched-scoring backend override: None = auto (Pallas on TPU, jnp
-    # reference elsewhere); "ref" | "pallas" to force
+    # reference elsewhere); "numpy" | "ref" | "pallas" to force
     score_impl: Optional[str] = None
+    # re-verify safety condition (a) in-dispatch with this θ against each
+    # bid's OWN window capacity (per-variant capacities; heterogeneous
+    # slices).  None = off: generation already enforces condition (a).
+    recheck_theta: Optional[float] = None
+    # bounded FMP-grid discretization cache (entries), scoped to this
+    # scheduler instance — see kernels.jasda_score.ops.FMPGridCache
+    grid_cache_size: int = 1024
+    # cap on audit-trail rows (iteration log AND commit log); None = keep all
+    max_log_rows: Optional[int] = None
 
 
 @dataclass
@@ -75,6 +100,57 @@ class IterationLog:
     n_conflicts: int = 0
 
 
+@dataclass
+class CommitRecord:
+    """Lightweight audit row for one commitment (no variant/FMP retained).
+
+    ``status`` tracks the commitment lifecycle: ``active`` →
+    ``completed`` | ``failed`` | ``lost`` (slice died).  On early finishes
+    ``t_end`` is truncated to the actually-executed end.
+    """
+
+    variant_id: str
+    job_id: str
+    slice_id: str
+    t_start: float
+    t_end: float
+    commit_time: float
+    score: float
+    status: str = "active"
+
+    @property
+    def interval(self) -> Tuple[float, float]:
+        return (self.t_start, self.t_end)
+
+
+@dataclass
+class RoundPrep:
+    """The prepared (host) half of one auction round, ready to settle.
+
+    Produced by :meth:`JasdaScheduler._prepare_round`; the scoring dispatch
+    (``handle``) may still be in flight on device.  ``epoch`` snapshots the
+    scheduler state version the preparation was computed against — the
+    pipeline only reuses a speculative prep whose epoch still matches.
+    ``bids[a][k]`` holds agent a's bids on window k (agent-major pool
+    order), so invalidated windows can be dropped without regenerating the
+    surviving windows' bids.
+    """
+
+    now: float
+    epoch: int
+    windows: List[Window]
+    agents: List[JobAgent] = field(default_factory=list)
+    bids: List[List[List[Variant]]] = field(default_factory=list)
+    pool: List[Variant] = field(default_factory=list)
+    fit: List[Variant] = field(default_factory=list)
+    win_idx: object = None  # (F,) window index per fitting bid
+    view: object = None  # types.PoolView aligned with ``fit``
+    bidders: int = 0
+    budget: Dict[str, float] = field(default_factory=dict)
+    handle: Optional[object] = None  # scoring.ScoreHandle
+    stats_snap: Optional[Dict[str, Tuple[int, int]]] = None  # speculative only
+
+
 class JasdaScheduler:
     def __init__(self, slices: Sequence[SliceSpec], config: SchedulerConfig = SchedulerConfig()):
         self.config = config
@@ -84,23 +160,45 @@ class JasdaScheduler:
         self.agents: Dict[str, JobAgent] = {}
         self.calibrator = Calibrator(config.calibration)
         self.ages = AgeTracker(config.age)
+        # outstanding commitments only; settled ones are pruned (complete/
+        # fail/drop_slice) and survive as commit_log rows + running totals
         self.commitments: List[Commitment] = []
+        self.commit_log: List[CommitRecord] = []
+        self.n_committed_total: int = 0
+        self.committed_score_total: float = 0.0
+        # keyed by id(variant): variant ids are only unique within a round
+        # (jobs._make_variant), while outstanding commitments span rounds —
+        # identity keying cannot collide because the Commitment in the entry
+        # keeps its variant alive for exactly the entry's lifetime
+        self._commit_index: Dict[int, Tuple[Commitment, CommitRecord]] = {}
         self.log: List[IterationLog] = []
         self.retired_intervals: Dict[str, List[Tuple[float, float]]] = {}
         self._dead_windows = DeadWindowRegistry(eps=config.dead_window_eps)
+        # state version: bumped by EVERY mutation that could change what a
+        # future round announces, who bids, or how bids are scored.  The
+        # round pipeline validates speculative preparations against it.
+        self._epoch = 0
+        # per-scheduler bounded FMP grid cache (replaces the old
+        # process-global lru_cache, which leaked grids across instances)
+        from ..kernels.jasda_score.ops import FMPGridCache
+
+        self._grid_cache = FMPGridCache(maxsize=config.grid_cache_size)
 
     # -- membership -----------------------------------------------------------
     def add_job(self, agent: JobAgent, now: float) -> None:
         self.agents[agent.spec.job_id] = agent
         self.ages.register_arrival(agent.spec.job_id, now)
+        self._epoch += 1
 
     def remove_job(self, job_id: str) -> None:
         self.agents.pop(job_id, None)
         self.ages.remove(job_id)
+        self._epoch += 1
 
     def add_slice(self, spec: SliceSpec) -> None:
         """Elastic scale-up: a new slice joins the pool mid-run."""
         self.slices[spec.slice_id] = SliceTimeline(spec)
+        self._epoch += 1
 
     def drop_slice(self, slice_id: str, now: Optional[float] = None) -> List[Commitment]:
         """Slice failure/scale-down: returns the commitments that were lost."""
@@ -115,9 +213,13 @@ class JasdaScheduler:
         lost = [c for c in self.commitments if c.variant.slice_id == slice_id]
         self.commitments = [c for c in self.commitments if c.variant.slice_id != slice_id]
         for c in lost:
+            entry = self._commit_index.pop(id(c.variant), None)
+            if entry is not None:
+                entry[1].status = "lost"
             agent = self.agents.get(c.variant.job_id)
             if agent is not None:
                 agent.mark_settled(c.variant)  # work becomes biddable again
+        self._epoch += 1
         return lost
 
     # -- the interaction cycle: batched auction rounds --------------------------
@@ -126,14 +228,28 @@ class JasdaScheduler:
 
         Returns None when no window is announceable (idle control plane).
         """
-        self._dead_windows.prune(now)
-        windows = announce_windows(
-            self.slices, now, self.config.window, exclude=self._dead_windows
-        )
-        if not windows:
-            self.log.append(IterationLog(now, None, 0, 0, 0, 0.0))
-            return None
-        return self._execute_round(now, windows)
+        return self._settle_round(self._prepare_round(now))
+
+    def run_rounds_pipelined(self, times: Sequence[float]) -> List[Optional[RoundResult]]:
+        """Run consecutive rounds with host/device double-buffering.
+
+        Semantically identical to ``[self.run_round(t) for t in times]`` —
+        selections, commitments, logs and agent statistics are byte-for-byte
+        equal (equivalence-tested) — but while round k's batched scores are
+        in flight on device, the host already announces windows and
+        collects/packs bids for round k+1.  See core/pipeline.py for the
+        speculation-validation protocol.
+        """
+        from .pipeline import RoundPipeline
+
+        times = list(times)
+        pipe = RoundPipeline(self)
+        out: List[Optional[RoundResult]] = []
+        for i, t in enumerate(times):
+            nxt = times[i + 1] if i + 1 < len(times) else None
+            out.append(pipe.tick(t, next_time=nxt))
+        pipe.flush()
+        return out
 
     def step(self, now: float) -> Optional[ClearingResult]:
         """Legacy single-window iteration (paper A3): a one-window round.
@@ -146,42 +262,102 @@ class JasdaScheduler:
             self.slices, now, self.config.window, exclude=self._dead_windows
         )
         if window is None:
-            self.log.append(IterationLog(now, None, 0, 0, 0, 0.0))
+            self._append_log(IterationLog(now, None, 0, 0, 0, 0.0))
             return None
-        return self._execute_round(now, [window]).results[0]
+        rr = self._settle_round(self._build_prep(now, [window]))
+        return rr.results[0]
 
-    def _execute_round(self, now: float, windows: Sequence[Window]) -> RoundResult:
+    # -- prepare half: announce + bids + pack + async dispatch ----------------
+    def _prepare_round(self, now: float, *, speculative: bool = False) -> RoundPrep:
+        """Host-side half of a round: announce, collect bids, dispatch scores.
+
+        With ``speculative=True`` the per-agent bid statistics are
+        snapshotted (generation mutates them) so the pipeline can roll them
+        back if the preparation is discarded; variant ids are deterministic
+        (jobs.py), so generation itself is replayable.
+        """
+        self._dead_windows.prune(now)
+        windows = announce_windows(
+            self.slices, now, self.config.window, exclude=self._dead_windows
+        )
+        if not windows:
+            return RoundPrep(now=now, epoch=self._epoch, windows=[])
+        return self._build_prep(now, windows, speculative=speculative)
+
+    def _build_prep(
+        self, now: float, windows: List[Window], *, speculative: bool = False
+    ) -> RoundPrep:
         # Steps 2–3: every job answers the full window set (or stays silent).
         chips = {sid: tl.spec.n_chips for sid, tl in self.slices.items()}
+        agents = list(self.agents.values())
+        snap = (
+            {a.spec.job_id: a.stats_snapshot() for a in agents}
+            if speculative else None
+        )
+        bids = [a.generate_variants_by_window(windows, now, chips) for a in agents]
+        prep = RoundPrep(
+            now=now, epoch=self._epoch, windows=list(windows),
+            agents=agents, bids=bids, stats_snap=snap,
+        )
+        self._finalize_prep(prep)
+        return prep
+
+    def _finalize_prep(self, prep: RoundPrep) -> None:
+        """Pool assembly + packing + scoring dispatch for prepared bids.
+
+        Factored out so the pipeline can re-run it after dropping the bids
+        of invalidated (suppressed-since-speculation) windows.
+        """
         pool: List[Variant] = []
         bidders = 0
         budget: Dict[str, float] = {}
-        for agent in self.agents.values():
-            vs = agent.generate_variants_round(windows, now, chips)
-            if vs:
+        for agent, per_window in zip(prep.agents, prep.bids):
+            n = sum(len(vs) for vs in per_window)
+            if n:
                 bidders += 1
-                pool.extend(vs)
+                for vs in per_window:
+                    pool.extend(vs)
                 budget[agent.spec.job_id] = agent.biddable_work
+        prep.pool = pool
+        prep.bidders = bidders
+        prep.budget = budget
+        prep.fit, prep.win_idx, prep.view = assign_bids(prep.windows, pool)
+        prep.handle = None
+        if prep.fit:
+            # Step 4a: ONE batched scoring dispatch, left in flight (JAX
+            # async) — the settle half blocks on it; the pipeline overlaps
+            # it with the next round's host work.
+            prep.handle = score_round_async(
+                prep.fit, prep.windows, prep.win_idx,
+                self.config.scoring,
+                ages=self.ages.ages(prep.now),
+                calibrate=self.calibrator.calibrate,
+                impl=self.config.score_impl,
+                recheck_theta=self.config.recheck_theta,
+                grid_cache=self._grid_cache,
+                view=prep.view,
+            )
 
-        # Step 4: one batched scoring dispatch + WIS per window + cross-window
-        # conflict resolution (a job keeps only compatible best-scored wins).
-        rr = clear_round(
-            windows,
-            pool,
-            self.config.scoring,
-            ages=self.ages.ages(now),
-            calibrate=self.calibrator.calibrate,
-            work_budget=budget,
-            score_impl=self.config.score_impl,
+    # -- settle half: block on scores, clear, commit ---------------------------
+    def _settle_round(self, prep: RoundPrep) -> Optional[RoundResult]:
+        if not prep.windows:
+            self._append_log(IterationLog(prep.now, None, 0, 0, 0, 0.0))
+            return None
+        scores = prep.handle.result() if prep.handle is not None else np.zeros(0)
+        # Step 4b: WIS per window + cross-window conflict resolution.
+        rr = settle_round(
+            prep.windows, prep.fit, prep.win_idx, scores,
+            work_budget=prep.budget, view=prep.view,
         )
 
         # Step 5: commit winners; suppress windows that cleared empty.
+        now = prep.now
         for result in rr.results:
             if result.selected:
                 tl = self.slices[result.window.slice_id]
                 for v, s in zip(result.selected, result.scores):
                     tl.commit(v.t_start, v.t_end)
-                    self.commitments.append(Commitment(variant=v, commit_time=now, score=s))
+                    self._record_commit(v, now, s)
                     self.ages.mark_selected(v.job_id, now)
                     agent = self.agents[v.job_id]
                     agent.n_wins += 1
@@ -192,15 +368,58 @@ class JasdaScheduler:
                     result.window.t_min,
                     now + self.config.dead_window_cooldown,
                 )
+        if rr.selected:
+            # timelines, agent budgets and ages changed: invalidate any
+            # speculative preparation built against the pre-settle state
+            self._epoch += 1
 
-        rr.n_bidders = bidders
-        self.log.append(
+        rr.n_bidders = prep.bidders
+        self._append_log(
             IterationLog(
-                now, windows[0], bidders, rr.n_bids, len(rr.selected),
-                rr.total_score, n_windows=len(windows), n_conflicts=rr.n_conflicts,
+                now, prep.windows[0], prep.bidders, rr.n_bids, len(rr.selected),
+                rr.total_score, n_windows=len(prep.windows),
+                n_conflicts=rr.n_conflicts,
             )
         )
         return rr
+
+    # -- bounded bookkeeping ---------------------------------------------------
+    def _record_commit(self, v: Variant, now: float, score: float) -> None:
+        c = Commitment(variant=v, commit_time=now, score=score)
+        rec = CommitRecord(
+            variant_id=v.variant_id, job_id=v.job_id, slice_id=v.slice_id,
+            t_start=v.t_start, t_end=v.t_end, commit_time=now,
+            score=float(score),
+        )
+        self.commitments.append(c)
+        self._commit_index[id(v)] = (c, rec)
+        self.commit_log.append(rec)
+        self.n_committed_total += 1
+        self.committed_score_total += float(score)
+        cap = self.config.max_log_rows
+        if cap is not None and len(self.commit_log) > cap:
+            del self.commit_log[: len(self.commit_log) - cap]
+
+    def _append_log(self, row: IterationLog) -> None:
+        self.log.append(row)
+        cap = self.config.max_log_rows
+        if cap is not None and len(self.log) > cap:
+            del self.log[: len(self.log) - cap]
+
+    def _prune_commitment(self, variant: Variant, status: str) -> Optional[CommitRecord]:
+        # identity lookup: complete()/fail() receive the committed Variant
+        # object back from the executor/simulator (an equal-but-distinct
+        # object would simply not prune, as before this PR — never corrupt)
+        entry = self._commit_index.pop(id(variant), None)
+        if entry is None:
+            return None
+        c, rec = entry
+        rec.status = status
+        try:
+            self.commitments.remove(c)
+        except ValueError:
+            pass  # already removed (e.g. slice dropped concurrently)
+        return rec
 
     # -- ex-post feedback (paper §4.2.1) -----------------------------------------
     def complete(
@@ -214,9 +433,12 @@ class JasdaScheduler:
     ) -> float:
         """Ingest execution ground truth for a committed variant.
 
-        Updates calibration state (ρ_J, HistAvg) and job progress; if the
-        subjob finished EARLY, the reclaimed tail of its committed interval
-        is released back to the timeline (new window for future rounds).
+        Updates calibration state (ρ_J, HistAvg) and job progress; prunes the
+        commitment from the outstanding set (its audit row survives in
+        ``commit_log`` as ``completed``); if the subjob finished EARLY, the
+        reclaimed tail of its committed interval is released back to the
+        timeline (new window for future rounds) and the audit row's end is
+        truncated to the executed end.
         """
         eps = self.calibrator.verify(variant, observed_features, observed_utility)
         agent = self.agents.get(variant.job_id)
@@ -225,11 +447,15 @@ class JasdaScheduler:
             agent.record_progress(
                 work_done if work_done is not None else variant.payload["work"]
             )
+        rec = self._prune_commitment(variant, "completed")
         if actual_end is not None and actual_end < variant.t_end - 1e-9:
             tl = self.slices.get(variant.slice_id)
             if tl is not None:
                 tl.release(variant.t_start, variant.t_end)
                 tl.commit(variant.t_start, actual_end)
+            if rec is not None:
+                rec.t_end = actual_end
+        self._epoch += 1
         return eps
 
     def fail(self, variant: Variant, now: float) -> None:
@@ -248,6 +474,8 @@ class JasdaScheduler:
         agent = self.agents.get(variant.job_id)
         if agent is not None:
             agent.mark_settled(variant)
+        self._prune_commitment(variant, "failed")
+        self._epoch += 1
 
     # -- reporting ------------------------------------------------------------
     def utilization(self, t_from: float, t_to: float) -> Dict[str, float]:

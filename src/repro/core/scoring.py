@@ -34,6 +34,8 @@ __all__ = [
     "composite_score",
     "score_pool",
     "score_round",
+    "score_round_async",
+    "ScoreHandle",
     "job_utility",
     "system_utility",
     "POLICY_QOS_FIRST",
@@ -250,6 +252,103 @@ def score_pool(
     return out
 
 
+class ScoreHandle:
+    """A possibly in-flight batched scoring dispatch.
+
+    The device paths (jnp reference / Pallas) return jax arrays that
+    materialize asynchronously; :meth:`result` blocks only at the host
+    boundary.  The pipeline (core/pipeline.py) dispatches round k, overlaps
+    host work for round k+1 while the scores are in flight, and settles k
+    via ``result()``.  The numpy small-pool path is eager (already a host
+    array) so ``result()`` is free.
+    """
+
+    def __init__(self, scores):
+        self._scores = scores
+
+    @property
+    def in_flight(self) -> bool:
+        """True while the scores are still device-side (worth overlapping)."""
+        return not isinstance(self._scores, np.ndarray)
+
+    def result(self) -> np.ndarray:
+        # np.asarray on a jax array blocks until the computation lands
+        self._scores = np.asarray(self._scores, dtype=np.float64)
+        return self._scores
+
+
+def score_round_async(
+    variants: Sequence[Variant],
+    windows: Sequence[Window],
+    win_idx,
+    policy: ScoringPolicy,
+    *,
+    ages: Optional[Mapping[str, float]] = None,
+    calibrate: Optional[Callable[[Variant, float], float]] = None,
+    impl: Optional[str] = None,
+    grid: int = 32,
+    recheck_theta: Optional[float] = None,
+    grid_cache=None,
+    view=None,
+) -> ScoreHandle:
+    """Pack + dispatch one pooled round; return without blocking on scores.
+
+    Same contract as :func:`score_round` but the device computation is left
+    in flight (JAX async dispatch): call ``.result()`` on the returned
+    :class:`ScoreHandle` to materialize.  This is the dispatch half the
+    round pipeline overlaps with the next round's host-side work.
+    ``view`` (types.PoolView aligned with ``variants``) skips the remaining
+    per-variant python walks when the caller already built one.
+    """
+    m = len(variants)
+    if m == 0:
+        return ScoreHandle(np.zeros(0, dtype=np.float64))
+    # lazy import: keeps the numpy-only control plane importable without jax
+    from ..kernels.jasda_score.ops import pool_to_arrays_round
+
+    if calibrate is None and view is not None:
+        h = view.local_utility  # already a float64 column; no python walk
+    else:
+        h = np.empty(m, dtype=np.float64)
+        for i, v in enumerate(variants):
+            h[i] = calibrate(v, v.local_utility) if calibrate is not None else v.local_utility
+    recheck = recheck_theta is not None
+    packed = pool_to_arrays_round(
+        variants, windows, np.asarray(win_idx), policy,
+        h=h, ages=ages, grid=grid, pack_grids=recheck,
+        theta=recheck_theta if recheck else 1.0, cache=grid_cache,
+        view=view,
+    )
+    if impl is None and m < SMALL_POOL_M:
+        # device-dispatch overhead dominates tiny pools; same math on host
+        impl = "numpy"
+    if impl == "numpy":
+        if recheck:
+            from ..kernels.jasda_score.ops import score_variants_numpy
+
+            scores, _, _ = score_variants_numpy(
+                packed.fj, packed.fs, packed.alphas, packed.betas,
+                packed.mu, packed.sg,
+                lam=policy.lam, capacity=packed.caps, theta=packed.thetas,
+            )
+            return ScoreHandle(np.asarray(scores, np.float64))
+        # packed arrays are float64: ranks match the legacy per-window path
+        hh = np.clip(packed.fj @ packed.alphas, 0.0, 1.0)
+        ff = np.clip(packed.fs @ packed.betas, 0.0, 1.0)
+        return ScoreHandle(policy.lam * hh + (1.0 - policy.lam) * ff)
+
+    from ..kernels.jasda_score.ops import score_variants
+
+    scores, _, _ = score_variants(
+        packed.fj, packed.fs, packed.alphas, packed.betas, packed.mu, packed.sg,
+        lam=policy.lam,
+        capacity=packed.caps if recheck else 1.0,
+        theta=packed.thetas if recheck else 1.0,
+        impl=impl,
+    )
+    return ScoreHandle(scores)
+
+
 def score_round(
     variants: Sequence[Variant],
     windows: Sequence[Window],
@@ -260,6 +359,9 @@ def score_round(
     calibrate: Optional[Callable[[Variant, float], float]] = None,
     impl: Optional[str] = None,
     grid: int = 32,
+    recheck_theta: Optional[float] = None,
+    grid_cache=None,
+    view=None,
 ) -> np.ndarray:
     """Score a pooled ROUND of bids with ONE batched dispatch (Eq. 4).
 
@@ -268,41 +370,23 @@ def score_round(
     struct-of-arrays (``kernels/jasda_score.pool_to_arrays_round``) and
     scored in a single vectorized call — the Pallas kernel on TPU, the jnp
     reference elsewhere (``impl`` forces a path).  Calibration (§4.2.1) is a
-    host-side per-job transform, applied before packing; safety (condition
-    (a)) was already enforced at variant generation, so the kernel's
-    eligibility mask is packed as a no-op.
+    host-side per-job transform, applied before packing.
+
+    Safety (condition (a)) was already enforced at variant generation; pass
+    ``recheck_theta`` to RE-verify it in-dispatch against each bid's OWN
+    window capacity (per-variant capacities, heterogeneous slices): unsafe
+    variants score 0 and never enter clearing.  All three backends (numpy /
+    jnp ref / Pallas) implement identical recheck semantics.
 
     ``win_idx[i]`` gives the index into ``windows`` that variant i bids on.
     ``impl``: None = auto (host numpy below ``SMALL_POOL_M`` bids, else
     Pallas on TPU / jnp reference), or "numpy" | "ref" | "pallas" to force.
+    ``grid_cache`` optionally reuses FMP grid discretizations across rounds
+    (see ``kernels.jasda_score.ops.FMPGridCache``).
     Returns float scores aligned with ``variants``.
     """
-    m = len(variants)
-    if m == 0:
-        return np.zeros(0, dtype=np.float64)
-    # lazy import: keeps the numpy-only control plane importable without jax
-    from ..kernels.jasda_score.ops import pool_to_arrays_round
-
-    h = np.empty(m, dtype=np.float64)
-    for i, v in enumerate(variants):
-        h[i] = calibrate(v, v.local_utility) if calibrate is not None else v.local_utility
-    fj, fs, alphas, betas, mu, sg = pool_to_arrays_round(
-        variants, windows, np.asarray(win_idx), policy,
-        h=h, ages=ages, grid=grid, pack_grids=False,
-    )
-    if impl is None and m < SMALL_POOL_M:
-        # device-dispatch overhead dominates tiny pools; same math on host
-        impl = "numpy"
-    if impl == "numpy":
-        # packed arrays are float64: ranks match the legacy per-window path
-        hh = np.clip(fj @ alphas, 0.0, 1.0)
-        ff = np.clip(fs @ betas, 0.0, 1.0)
-        return policy.lam * hh + (1.0 - policy.lam) * ff
-
-    from ..kernels.jasda_score.ops import score_variants
-
-    scores, _, _ = score_variants(
-        fj, fs, alphas, betas, mu, sg,
-        lam=policy.lam, capacity=1.0, theta=1.0, impl=impl,
-    )
-    return np.asarray(scores, dtype=np.float64)
+    return score_round_async(
+        variants, windows, win_idx, policy,
+        ages=ages, calibrate=calibrate, impl=impl, grid=grid,
+        recheck_theta=recheck_theta, grid_cache=grid_cache, view=view,
+    ).result()

@@ -47,6 +47,11 @@ class SimConfig:
     # capacity enforcement: sample the true memory trajectory and count
     # violations (validates the θ safety bound end-to-end)
     check_capacity: bool = True
+    # double-buffer consecutive auction rounds (core/pipeline.py): the host
+    # prepares tick t+dt's bids while tick t's scores are in flight on
+    # device.  Selections are identical to serial rounds (tested); disable
+    # to force the serial reference path.
+    pipeline: bool = True
 
 
 @dataclass
@@ -105,6 +110,14 @@ def simulate(
                 push(t, _FAIL, sid)
                 t += cfg.repair_time + rng.exponential(1.0 / cfg.failure_rate)
 
+    # multi-tick round pipelining: JASDA schedulers expose the prepare/settle
+    # split; baselines fall back to their serial run_round
+    pipe = None
+    if cfg.pipeline and hasattr(scheduler, "_prepare_round"):
+        from .pipeline import RoundPipeline
+
+        pipe = RoundPipeline(scheduler)
+
     running: Dict[str, Tuple[Variant, float]] = {}  # slice -> (variant, actual_end)
     dead_slices: Dict[str, SliceSpec] = {}
     jct: Dict[str, float] = {}
@@ -159,7 +172,11 @@ def simulate(
             # auction round clears ALL open windows across all slices —
             # replacing the former 3 × n_slices sequential step() loop.
             iterations += 1
-            rr = scheduler.run_round(now)
+            if pipe is not None:
+                nxt = now + cfg.iteration_dt
+                rr = pipe.tick(now, next_time=nxt if nxt <= cfg.t_end else None)
+            else:
+                rr = scheduler.run_round(now)
             if rr is not None and rr.selected:
                 pending.extend(rr.selected)
             # launch any committed variants whose start has arrived
@@ -221,6 +238,9 @@ def simulate(
             if spec is not None:
                 scheduler.add_slice(spec)
 
+    if pipe is not None:
+        pipe.flush()  # roll back any outstanding speculative bid statistics
+
     # ---- metrics ------------------------------------------------------------
     # utilization over the ACTIVE span [first arrival, last completion]: long
     # idle tails after the workload drains would otherwise dilute the metric
@@ -249,8 +269,12 @@ def simulate(
         n_finished=len(jct),
         n_jobs=len(agents),
         capacity_violations=violations,
-        n_committed=len(scheduler.commitments),
-        total_score=float(sum(c.score for c in scheduler.commitments)),
+        # running totals survive commitment pruning (completed/failed
+        # commitments leave the outstanding list; see scheduler.commit_log)
+        n_committed=getattr(scheduler, "n_committed_total",
+                            len(scheduler.commitments)),
+        total_score=float(getattr(scheduler, "committed_score_total",
+                                  sum(c.score for c in scheduler.commitments))),
         jct_per_job=jct,
         reliability={j: s["rho"] for j, s in cal.items()},
         iterations=iterations,

@@ -199,6 +199,58 @@ class RoundResult:
 # ---------------------------------------------------------------------------
 
 
+@dataclass
+class PoolView:
+    """Single-walk struct-of-arrays view of a variant pool.
+
+    The round hot path (window assignment → feature packing → per-window
+    WIS) used to re-walk the python variant objects once per stage; a
+    PoolView walks the pool ONCE and every stage operates on numpy columns
+    (plus parallel python lists for the non-numeric fields).  ``take``
+    produces an aligned sub-view without touching the variant objects.
+    """
+
+    variants: list
+    t_start: np.ndarray  # (M,) float64
+    duration: np.ndarray  # (M,) float64
+    t_end: np.ndarray  # (M,) float64
+    local_utility: np.ndarray  # (M,) float64
+    slice_ids: list  # per-variant slice id strings
+    job_ids: list  # per-variant job id strings
+    fmps: list  # per-variant FMP references
+
+    @classmethod
+    def build(cls, variants: Sequence[Variant]) -> "PoolView":
+        if not variants:
+            z = np.zeros(0, np.float64)
+            return cls([], z, z.copy(), z.copy(), z.copy(), [], [], [])
+        rows = [
+            (v.t_start, v.duration, v.slice_id, v.job_id, v.fmp, v.local_utility)
+            for v in variants
+        ]
+        ts, dur, sids, jids, fmps, h = zip(*rows)
+        t_start = np.asarray(ts, np.float64)
+        duration = np.asarray(dur, np.float64)
+        return cls(
+            list(variants), t_start, duration, t_start + duration,
+            np.asarray(h, np.float64), list(sids), list(jids), list(fmps),
+        )
+
+    def __len__(self) -> int:
+        return len(self.variants)
+
+    def take(self, idx) -> "PoolView":
+        idx = np.asarray(idx, np.intp)
+        return PoolView(
+            [self.variants[i] for i in idx],
+            self.t_start[idx], self.duration[idx], self.t_end[idx],
+            self.local_utility[idx],
+            [self.slice_ids[i] for i in idx],
+            [self.job_ids[i] for i in idx],
+            [self.fmps[i] for i in idx],
+        )
+
+
 def variants_to_arrays(variants: Sequence[Variant]) -> dict:
     """Convert a variant pool to a struct-of-arrays dict for device kernels."""
     n = len(variants)

@@ -141,6 +141,17 @@ class DeadWindowRegistry:
     Matching is epsilon-tolerant on the window start: a gap whose boundary
     drifted by float noise (release / early finish / re-merge) is still the
     same dead window.
+
+    Invariants the round pipeline (core/pipeline.py) relies on:
+
+    * settling a round only ever ADDS suppressions (``add``) — it never
+      resurrects a window — so a speculative announcement can be validated
+      by re-checking ``suppressed`` per window and *filtering*, without
+      re-deriving gaps;
+    * ``prune`` is deterministic in ``(registry state, now)`` and
+      idempotent at a fixed ``now``, so speculative preparation may prune
+      early for the next round's timestamp without changing what a serial
+      preparation at that timestamp would see.
     """
 
     def __init__(self, eps: float = 1e-6):

@@ -4,11 +4,25 @@ The paper's per-iteration hot loop (Algorithm 1 lines 6–8) evaluated for M
 variants at once: two small feature matmuls (MXU) fused with the log-space
 safety reduction over the FMP time grid (VPU), one VMEM pass.
 
+Calling convention (the zero-recompile contract)
+------------------------------------------------
+``lam``, ``capacity`` and ``theta`` are **traced runtime operands**, not
+compile-time constants: one compiled executable serves every policy preset
+(λ), every mix of per-window slice capacities, and every safety bound θ.
+Each is a per-variant ``(M, 1)`` float32 column — scalars are broadcast by
+the caller (ops.py keeps the scalar overload) — so a single dispatch can
+re-verify eligibility condition (a) against *heterogeneous* capacities:
+variant i is checked against the capacity of the window it bids on.
+
+Only ``block_m`` and ``interpret`` remain static: the jit cache is keyed by
+(M-bucket, T, Fj, Fs) shapes alone, and ops.py pads M to power-of-two
+buckets so drifting pool sizes reuse one executable per bucket.
+
 Tiling: grid over M blocks; each program holds (BM, Fj)+(BM, Fs) feature
-tiles, the (BM, T) FMP grid tiles, and produces (BM,) scores + eligibility.
-T and F are padded to lane multiples by ops.py.  A GPU port would reduce
-across a warp per variant; on TPU the whole (BM, T) tile reduces in one
-vectorized `sum` on the VPU.
+tiles, the (BM, T) FMP grid tiles, the (BM, 1) λ/capacity/θ columns, and
+produces (BM,) scores + eligibility.  T and F are padded to lane multiples
+by ops.py.  A GPU port would reduce across a warp per variant; on TPU the
+whole (BM, T) tile reduces in one vectorized `sum` on the VPU.
 """
 from __future__ import annotations
 
@@ -21,21 +35,31 @@ import jax.experimental.pallas.tpu as pltpu
 
 from ..common import log_ndtr
 
-__all__ = ["score_variants_pallas"]
+__all__ = ["score_variants_pallas", "TRACE_COUNT"]
+
+# Incremented each time the jitted wrapper RETRACES (python body re-executes
+# only on a jit cache miss) — benchmarks/run.py's score_dispatch scenario
+# asserts this stays flat across rounds with varying (λ, capacity, θ, M).
+TRACE_COUNT = {"pallas": 0}
+
+
+def _as_column(x, m: int) -> jnp.ndarray:
+    """Broadcast a scalar / (M,) / (M,1) runtime parameter to (M, 1) f32."""
+    x = jnp.asarray(x, jnp.float32)
+    if x.ndim == 0:
+        return jnp.broadcast_to(x, (m, 1))
+    return x.reshape(m, 1)
 
 
 def _score_kernel(
-    fj_ref, fs_ref, al_ref, be_ref, mu_ref, sg_ref,
+    fj_ref, fs_ref, al_ref, be_ref, mu_ref, sg_ref, lam_ref, cap_ref, th_ref,
     score_ref, elig_ref,
-    *,
-    lam: float,
-    capacity: float,
-    theta: float,
 ):
     fj = fj_ref[...].astype(jnp.float32)  # (BM, Fj)
     fs = fs_ref[...].astype(jnp.float32)  # (BM, Fs)
     al = al_ref[...].astype(jnp.float32)  # (1, Fj)
     be = be_ref[...].astype(jnp.float32)  # (1, Fs)
+    lam = lam_ref[...].astype(jnp.float32)[:, 0]  # (BM,)
 
     h = jnp.clip(jnp.sum(fj * al, axis=-1), 0.0, 1.0)  # (BM,)
     f = jnp.clip(jnp.sum(fs * be, axis=-1), 0.0, 1.0)
@@ -43,10 +67,12 @@ def _score_kernel(
 
     mu = mu_ref[...].astype(jnp.float32)  # (BM, T)
     sg = sg_ref[...].astype(jnp.float32)
-    z = (capacity - mu) / jnp.maximum(sg, 1e-30)
+    cap = cap_ref[...].astype(jnp.float32)  # (BM, 1) -> broadcasts over T
+    theta = th_ref[...].astype(jnp.float32)[:, 0]  # (BM,)
+    z = (cap - mu) / jnp.maximum(sg, 1e-30)
     # deterministic grid points: surely-safe -> logphi 0; surely-violating -> -inf
-    safe_det = jnp.logical_and(sg <= 0.0, mu <= capacity)
-    viol_det = jnp.logical_and(sg <= 0.0, mu > capacity)
+    safe_det = jnp.logical_and(sg <= 0.0, mu <= cap)
+    viol_det = jnp.logical_and(sg <= 0.0, mu > cap)
     logphi = jnp.where(safe_det, 0.0, log_ndtr(jnp.where(sg > 0, z, 0.0)))
     logphi = jnp.where(viol_det, -jnp.inf, logphi)
     log_surv = jnp.sum(logphi, axis=-1)  # (BM,)
@@ -57,9 +83,7 @@ def _score_kernel(
     elig_ref[...] = eligible[None, :].astype(jnp.int32)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("lam", "capacity", "theta", "block_m", "interpret")
-)
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
 def score_variants_pallas(
     feat_job: jnp.ndarray,  # (M, Fj)
     feat_sys: jnp.ndarray,  # (M, Fs)
@@ -68,12 +92,13 @@ def score_variants_pallas(
     mu: jnp.ndarray,  # (M, T)
     sigma: jnp.ndarray,  # (M, T)
     *,
-    lam: float,
-    capacity: float,
-    theta: float,
+    lam,  # traced: scalar or (M,)/(M,1)
+    capacity,  # traced: scalar or (M,)/(M,1)
+    theta,  # traced: scalar or (M,)/(M,1)
     block_m: int = 256,
     interpret: bool = False,
 ):
+    TRACE_COUNT["pallas"] += 1
     m, fj = feat_job.shape
     _, fs = feat_sys.shape
     _, t = mu.shape
@@ -81,11 +106,12 @@ def score_variants_pallas(
     assert m % block_m == 0, "pad M to a block multiple in ops.py"
     grid = (m // block_m,)
 
-    kernel = functools.partial(
-        _score_kernel, lam=lam, capacity=capacity, theta=theta
-    )
+    lam_c = _as_column(lam, m)
+    cap_c = _as_column(capacity, m)
+    th_c = _as_column(theta, m)
+
     score, elig = pl.pallas_call(
-        kernel,
+        _score_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_m, fj), lambda i: (i, 0)),
@@ -94,6 +120,9 @@ def score_variants_pallas(
             pl.BlockSpec((1, fs), lambda i: (0, 0)),
             pl.BlockSpec((block_m, t), lambda i: (i, 0)),
             pl.BlockSpec((block_m, t), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, 1), lambda i: (i, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, block_m), lambda i: (0, i)),
@@ -104,5 +133,6 @@ def score_variants_pallas(
             jax.ShapeDtypeStruct((1, m), jnp.int32),
         ],
         interpret=interpret,
-    )(feat_job, feat_sys, alphas[None, :], betas[None, :], mu, sigma)
+    )(feat_job, feat_sys, alphas[None, :], betas[None, :], mu, sigma,
+      lam_c, cap_c, th_c)
     return score[0], elig[0].astype(bool)

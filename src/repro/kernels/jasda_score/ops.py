@@ -1,30 +1,98 @@
-"""Jit'd wrapper for batched variant scoring: padding + dispatch.
+"""Jit'd wrapper for batched variant scoring: padding + bucketed dispatch.
 
-Pads M to the block multiple (padded rows are self-masking: sigma=0 with
-mu > capacity makes them ineligible, score 0) and T/F to lane-friendly
-sizes, then calls the Pallas kernel (TPU / interpret) or the jnp reference.
+Zero-recompile contract (see kernel.py): λ, capacity and θ are traced
+runtime operands — scalars or per-variant vectors — so the jit cache is
+keyed by SHAPES only.  To keep drifting pool sizes from retracing, M is
+padded to power-of-two buckets (min ``MIN_BUCKET_M``): round k with 700
+bids and round k+1 with 900 both dispatch the 1024-row executable.  Padded
+rows are self-masking (capacity 0 with mu > 0 is a deterministic violation
+→ ineligible, score 0) and sliced off before returning.
+
+``pool_to_arrays_round`` packs a pooled auction round into struct-of-arrays
+form with a single python walk over the pool; FMP grid discretizations are
+memoized in a bounded :class:`FMPGridCache` scoped per scheduler / per round
+(NOT process-global — see the cache's docstring).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from collections import OrderedDict
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..common import use_interpret
+from .kernel import TRACE_COUNT as _PALLAS_TRACE_COUNT
 from .kernel import score_variants_pallas
 from .ref import score_variants_reference
 
-__all__ = ["score_variants", "pool_to_arrays", "pool_to_arrays_round"]
+__all__ = [
+    "score_variants",
+    "score_variants_numpy",
+    "pool_to_arrays",
+    "pool_to_arrays_round",
+    "PackedRound",
+    "FMPGridCache",
+    "MIN_BUCKET_M",
+    "bucket_m",
+    "trace_counts",
+]
+
+# Smallest M-bucket: pools below this pad up to one shared executable; above,
+# buckets double (256, 512, 1024, ...) so the jit cache stays O(log M_max).
+MIN_BUCKET_M = 256
+
+TRACE_COUNT = {"ref": 0}
 
 
-def _pad_rows(x: jnp.ndarray, m_pad: int, fill: float = 0.0) -> jnp.ndarray:
+def trace_counts() -> dict:
+    """Retrace counters per dispatch path (jit cache misses, cumulative).
+
+    The python body of a jitted wrapper runs only when jax (re)traces it, so
+    these stay flat across calls that hit the cache — the property the
+    ``score_dispatch`` benchmark gates on.
+    """
+    return {"pallas": _PALLAS_TRACE_COUNT["pallas"], "ref": TRACE_COUNT["ref"]}
+
+
+def bucket_m(m: int) -> int:
+    """Pad target for a pool of ``m`` rows: next power of two, min bucket."""
+    return max(MIN_BUCKET_M, 1 << int(np.ceil(np.log2(max(m, 1)))))
+
+
+def _pad_rows(x: np.ndarray, m_pad: int, fill: float = 0.0) -> np.ndarray:
     if x.shape[0] == m_pad:
         return x
-    pad = jnp.full((m_pad - x.shape[0],) + x.shape[1:], fill, x.dtype)
-    return jnp.concatenate([x, pad], axis=0)
+    pad = np.full((m_pad - x.shape[0],) + x.shape[1:], fill, x.dtype)
+    return np.concatenate([x, pad], axis=0)
+
+
+def _per_variant_np(x, m: int, fill_value: float = 0.0,
+                    m_pad: Optional[int] = None,
+                    dtype=np.float32) -> np.ndarray:
+    """Scalar / (M,) / (M,1) runtime parameter → padded (m_pad,) host array.
+
+    The single host-side normalizer for λ/capacity/θ — every numpy path
+    (bucketed dispatch padding, the small-pool scorer, round packing) goes
+    through it so the accepted shapes can never drift apart.  The traced
+    jnp equivalents live next to their kernels (ref._per_variant,
+    kernel._as_column).
+    """
+    m_pad = m_pad or m
+    out = np.full(m_pad, fill_value, dtype)
+    x = np.asarray(x, dtype)
+    out[:m] = x if x.ndim == 0 else x.reshape(-1)
+    return out
+
+
+@jax.jit
+def _score_ref_jit(feat_job, feat_sys, alphas, betas, mu, sigma, lam, capacity, theta):
+    TRACE_COUNT["ref"] += 1
+    return score_variants_reference(
+        feat_job, feat_sys, alphas, betas, mu, sigma,
+        lam=lam, capacity=capacity, theta=theta,
+    )
 
 
 def score_variants(
@@ -35,42 +103,104 @@ def score_variants(
     mu,
     sigma,
     *,
-    lam: float,
-    capacity: float,
-    theta: float,
+    lam,
+    capacity,
+    theta,
     impl: Optional[str] = None,
     block_m: int = 256,
+    bucket: bool = True,
 ):
-    feat_job = jnp.asarray(feat_job, jnp.float32)
-    feat_sys = jnp.asarray(feat_sys, jnp.float32)
-    alphas = jnp.asarray(alphas, jnp.float32)
-    betas = jnp.asarray(betas, jnp.float32)
-    mu = jnp.asarray(mu, jnp.float32)
-    sigma = jnp.asarray(sigma, jnp.float32)
+    """Batched scoring dispatch: Pallas on TPU, jnp reference elsewhere.
+
+    ``lam`` / ``capacity`` / ``theta`` accept scalars (legacy overload,
+    broadcast over the pool) or per-variant ``(M,)`` vectors.  All three are
+    runtime operands: changing their VALUES never recompiles.  With
+    ``bucket=True`` (default) M is padded to a power-of-two bucket so
+    changing pool SIZE only compiles once per bucket.
+
+    Returns ``(score, eligible, p_exceed)`` aligned with the input rows;
+    ``p_exceed`` is None on the Pallas path (not materialized in-kernel).
+    """
+    feat_job = np.asarray(feat_job, np.float32)
+    feat_sys = np.asarray(feat_sys, np.float32)
+    alphas = np.asarray(alphas, np.float32)
+    betas = np.asarray(betas, np.float32)
+    mu = np.asarray(mu, np.float32)
+    sigma = np.asarray(sigma, np.float32)
 
     if impl is None:
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
-    if impl == "ref":
-        return score_variants_reference(
-            feat_job, feat_sys, alphas, betas, mu, sigma,
-            lam=lam, capacity=capacity, theta=theta,
-        )
 
     m = feat_job.shape[0]
-    bm = min(block_m, max(8, m))
-    m_pad = -(-m // bm) * bm
+    m_pad = bucket_m(m) if bucket else m
     fj = _pad_rows(feat_job, m_pad)
     fs = _pad_rows(feat_sys, m_pad)
-    # padded rows: deterministic violation -> ineligible by construction
-    mu_p = _pad_rows(mu, m_pad, fill=float(capacity) * 2.0 + 1.0)
+    # padded rows: capacity 0 with mu 1 > 0 and sigma 0 is a deterministic
+    # violation -> ineligible by construction regardless of theta
+    mu_p = _pad_rows(mu, m_pad, fill=1.0)
     sg_p = _pad_rows(sigma, m_pad, fill=0.0)
-    score, elig, = score_variants_pallas(
+    lam_v = _per_variant_np(lam, m, 0.0, m_pad)
+    cap_v = _per_variant_np(capacity, m, 0.0, m_pad)
+    th_v = _per_variant_np(theta, m, 0.0, m_pad)
+
+    if impl == "ref":
+        score, elig, p_exceed = _score_ref_jit(
+            fj, fs, alphas, betas, mu_p, sg_p, lam_v, cap_v, th_v
+        )
+        return score[:m], elig[:m], p_exceed[:m]
+
+    bm = min(block_m, max(8, m_pad))
+    score, elig = score_variants_pallas(
         fj, fs, alphas, betas, mu_p, sg_p,
-        lam=lam, capacity=capacity, theta=theta,
+        lam=lam_v, capacity=cap_v, theta=th_v,
         block_m=bm, interpret=use_interpret(),
-    )[:2]
+    )
     # kernel does not return p_exceed; recompute lazily only if needed
     return score[:m], elig[:m], None
+
+
+def score_variants_numpy(
+    feat_job,
+    feat_sys,
+    alphas,
+    betas,
+    mu,
+    sigma,
+    *,
+    lam,
+    capacity,
+    theta,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host numpy path with semantics identical to ref.py / the kernel.
+
+    Used below ``scoring.SMALL_POOL_M`` where one device dispatch costs more
+    than the whole matmul; float64 so near-ties rank like the legacy
+    per-window path.  Returns ``(score, eligible, p_exceed)``.
+    """
+    from scipy.special import log_ndtr as _log_ndtr
+
+    fj = np.asarray(feat_job, np.float64)
+    fs = np.asarray(feat_sys, np.float64)
+    m = fj.shape[0]
+    lam_v = _per_variant_np(lam, m, dtype=np.float64)
+    cap_v = _per_variant_np(capacity, m, dtype=np.float64)
+    th_v = _per_variant_np(theta, m, dtype=np.float64)
+
+    h = np.clip(fj @ np.asarray(alphas, np.float64), 0.0, 1.0)
+    f = np.clip(fs @ np.asarray(betas, np.float64), 0.0, 1.0)
+    score = lam_v * h + (1.0 - lam_v) * f
+
+    mu = np.asarray(mu, np.float64)
+    sg = np.asarray(sigma, np.float64)
+    cap_c = cap_v[:, None]
+    with np.errstate(divide="ignore", invalid="ignore"):
+        z = np.where(sg > 0, (cap_c - mu) / np.maximum(sg, 1e-300),
+                     np.where(mu <= cap_c, np.inf, -np.inf))
+    logphi = np.where(np.isposinf(z), 0.0, _log_ndtr(np.where(np.isposinf(z), 0.0, z)))
+    log_surv = np.sum(logphi, axis=-1)
+    p_exceed = -np.expm1(log_surv)
+    eligible = p_exceed <= th_v
+    return np.where(eligible, score, 0.0), eligible, p_exceed
 
 
 def _pack_job_features(variants, policy, dtype=np.float32):
@@ -120,13 +250,69 @@ def pool_to_arrays(
 # ---------------------------------------------------------------------------
 
 
-@functools.lru_cache(maxsize=4096)
-def _fmp_mean_mu(fmp, grid: int) -> float:
-    """mean_t mu(t) of a (hashable, frozen) FMP — the only grid statistic
-    ψ_mem_headroom needs, so a round over thousands of variants sharing a few
-    job FMPs touches each grid once."""
-    mu, _ = fmp.grid(grid)
-    return float(np.mean(mu))
+class FMPGridCache:
+    """Bounded LRU of FMP grid discretizations, scoped per scheduler/round.
+
+    Replaces the former process-global ``functools.lru_cache`` on the mean-mu
+    helper, which retained FMP objects (and their grids) across unrelated
+    scheduler instances and benchmark runs for the life of the process.  One
+    instance lives on each ``JasdaScheduler``; stateless callers get a fresh
+    per-call (per-round) cache.
+
+    Entries are keyed by ``(fmp, n_grid)`` (PhaseFMP is frozen/hashable) and
+    hold ``(mu_f32, sigma_f32, mean_mu_f64)`` — the f32 copies feed the
+    device pack directly, the float64 mean feeds the ψ_mem_headroom feature
+    with the same precision as the legacy per-window path.
+    """
+
+    def __init__(self, maxsize: int = 1024):
+        self.maxsize = max(1, int(maxsize))
+        self._d: "OrderedDict[tuple, tuple]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def grid(self, fmp, n: int) -> Tuple[np.ndarray, np.ndarray, float]:
+        key = (fmp, n)
+        hit = self._d.get(key)
+        if hit is not None:
+            self.hits += 1
+            self._d.move_to_end(key)
+            return hit
+        self.misses += 1
+        mu64, sg64 = fmp.grid(n)
+        entry = (
+            np.asarray(mu64, np.float32),
+            np.asarray(sg64, np.float32),
+            float(np.mean(mu64)),
+        )
+        self._d[key] = entry
+        while len(self._d) > self.maxsize:
+            self._d.popitem(last=False)
+        return entry
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def clear(self) -> None:
+        self._d.clear()
+
+
+class PackedRound(NamedTuple):
+    """Struct-of-arrays form of one pooled auction round.
+
+    ``caps``/``thetas`` are per-variant: ``caps[i]`` is the capacity of the
+    window variant i bids on (gathered via ``win_idx``), so the kernel can
+    re-verify safety condition (a) in-kernel against heterogeneous slices.
+    """
+
+    fj: np.ndarray  # (M, Fj) float64 job features (or calibrated h column)
+    fs: np.ndarray  # (M, Fs) float64 system features
+    alphas: np.ndarray  # (Fj,) float64
+    betas: np.ndarray  # (Fs,) float64
+    mu: np.ndarray  # (M, T) float32 FMP means (T=1 zeros when grids unpacked)
+    sg: np.ndarray  # (M, T) float32 FMP stds
+    caps: np.ndarray  # (M,) float64 per-variant window capacity
+    thetas: np.ndarray  # (M,) float64 per-variant safety bound
 
 
 def pool_to_arrays_round(
@@ -139,11 +325,16 @@ def pool_to_arrays_round(
     ages=None,
     grid: int = 32,
     pack_grids: bool = False,
-):
+    theta=1.0,
+    cache: Optional[FMPGridCache] = None,
+    view=None,
+) -> PackedRound:
     """Pack a pooled ROUND of bids for one batched scoring dispatch.
 
     Each variant is scored against ITS OWN window (``win_idx[i]`` indexes
-    ``windows``).  System features mirror ``scoring.score_pool`` exactly:
+    ``windows``); the returned :class:`PackedRound` carries the per-variant
+    window capacities and θ so the kernel re-verifies safety condition (a)
+    per window.  System features mirror ``scoring.score_pool`` exactly:
     [utilization, slack, mem_headroom, age], so the batched call reproduces
     the per-window numpy path.
 
@@ -152,7 +343,18 @@ def pool_to_arrays_round(
     is how the round path injects §4.2.1 calibration without a per-variant
     device round-trip.  ``pack_grids=False`` skips the (M, T) FMP grids (the
     in-kernel safety recheck is a no-op when generation already enforced
-    condition (a)); pass True to re-verify with a caller-chosen θ.
+    condition (a)); pass True to re-verify with ``theta`` (scalar broadcast
+    or per-variant vector).  ``cache`` memoizes FMP grid discretizations —
+    pass the scheduler's :class:`FMPGridCache` to reuse grids across rounds;
+    None uses a fresh per-call cache.
+
+    The pool is walked at most ONCE in python (``view`` — a
+    ``types.PoolView`` aligned with ``variants`` — skips even that); grids
+    and grid statistics are gathered from the cache by unique FMP, so a
+    round over thousands of variants sharing a few job FMPs touches each
+    grid once.  Within the round, FMPs are deduplicated by object identity
+    (cheap) and only the per-unique-FMP cache lookups hash the frozen
+    dataclass.
 
     Features stay float64 on the host so the small-pool numpy scoring path
     ranks variants exactly like the legacy per-window path even on near-ties;
@@ -160,29 +362,52 @@ def pool_to_arrays_round(
     device boundary.
     """
     m = len(variants)
+    win_idx = np.asarray(win_idx)
     w_tmin = np.asarray([w.t_min for w in windows], np.float64)[win_idx]
     w_dur = np.asarray([max(w.duration, 1e-9) for w in windows], np.float64)[win_idx]
     w_cap = np.asarray([w.capacity for w in windows], np.float64)[win_idx]
 
-    t_start = np.fromiter((v.t_start for v in variants), np.float64, m)
-    dur = np.fromiter((v.duration for v in variants), np.float64, m)
+    if cache is None:
+        cache = FMPGridCache(maxsize=max(64, m))
+
+    # -- at most one pool walk: scalars + unique-FMP gather -------------------
+    if view is not None:
+        t_start = view.t_start
+        dur = view.duration
+        fmp_list = view.fmps
+        job_ids = view.job_ids
+    else:
+        rows = [(v.t_start, v.duration, v.fmp, v.job_id) for v in variants]
+        ts, ds, fmp_list, job_ids = zip(*rows) if rows else ((), (), (), ())
+        t_start = np.asarray(ts, np.float64)
+        dur = np.asarray(ds, np.float64)
+        fmp_list = list(fmp_list)
+        job_ids = list(job_ids)
+    fmp_row = np.empty(m, np.intp)
+    row_of: dict = {}  # id(fmp) -> row (identity dedup: no dataclass hashing)
+    uniq = []  # [(mu_f32, sg_f32, mean_mu)]
+    for i, fmp in enumerate(fmp_list):
+        r = row_of.get(id(fmp))
+        if r is None:
+            r = len(uniq)
+            row_of[id(fmp)] = r
+            uniq.append(cache.grid(fmp, grid))
+        fmp_row[i] = r
+    if ages:
+        get_age = ages.get
+        age = np.asarray([get_age(j, 0.0) for j in job_ids], np.float64)
+    else:
+        age = np.zeros(m, np.float64)
+
     util = np.clip(dur / w_dur, 0.0, 1.0)
     slack = np.clip(1.0 - (t_start - w_tmin) / w_dur, 0.0, 1.0)
-    mean_mu = np.fromiter(
-        (_fmp_mean_mu(v.fmp, grid) for v in variants), np.float64, m
-    )
+    mean_mu = np.asarray([u[2] for u in uniq], np.float64)[fmp_row] if m else \
+        np.zeros(0, np.float64)
     with np.errstate(divide="ignore", invalid="ignore"):
         headroom = np.where(
             w_cap > 0, np.clip(1.0 - mean_mu / np.where(w_cap > 0, w_cap, 1.0), 0.0, 1.0), 0.0
         )
-    if ages:
-        age = np.fromiter(
-            (np.clip(ages.get(v.job_id, 0.0), 0.0, 1.0) for v in variants),
-            np.float64, m,
-        )
-    else:
-        age = np.zeros(m, np.float64)
-    fs = np.stack([util, slack, headroom, age], axis=1)
+    fs = np.stack([util, slack, headroom, np.clip(age, 0.0, 1.0)], axis=1)
     betas = np.array(
         [policy.betas.get("utilization", 0.0), policy.betas.get("slack", 0.0),
          policy.betas.get("mem_headroom", 0.0), policy.betas.get("age", 0.0)],
@@ -194,14 +419,16 @@ def pool_to_arrays_round(
     else:
         fj, alphas = _pack_job_features(variants, policy, dtype=np.float64)
 
-    if pack_grids:
-        mu = np.zeros((m, grid), np.float32)
-        sg = np.zeros((m, grid), np.float32)
-        for i, v in enumerate(variants):
-            mu[i], sg[i] = v.fmp.grid(grid)
+    if pack_grids and m:
+        mu_tab = np.stack([u[0] for u in uniq])
+        sg_tab = np.stack([u[1] for u in uniq])
+        mu = mu_tab[fmp_row]
+        sg = sg_tab[fmp_row]
     else:
         # sigma=0 with mu=0 <= capacity is deterministically safe: the
         # kernel's eligibility mask becomes a no-op, as intended
         mu = np.zeros((m, 1), np.float32)
         sg = np.zeros((m, 1), np.float32)
-    return fj, fs, alphas, betas, mu, sg
+
+    thetas = _per_variant_np(theta, m, dtype=np.float64)
+    return PackedRound(fj, fs, alphas, betas, mu, sg, w_cap, thetas)

@@ -186,8 +186,9 @@ def test_multi_slice_round_with_failures():
                              repair_time=40.0))
     assert res.n_finished == 25, "round auction must survive slice failures"
     per_job = {}
-    for c in sched.commitments:
-        per_job.setdefault(c.variant.job_id, []).append(c.variant.interval)
+    for r in sched.commit_log:
+        if r.status in ("active", "completed"):
+            per_job.setdefault(r.job_id, []).append(r.interval)
     for job, ivs in per_job.items():
         ivs.sort()
         for (s1, e1), (s2, e2) in zip(ivs, ivs[1:]):

@@ -42,7 +42,9 @@ def test_lambda_policy_spectrum():
             SchedulerConfig(scoring=ScoringPolicy(lam=lam)))
         agents = make_workload(30, seed=4, arrival_rate=2.0)
         simulate(sched, agents, SimConfig(t_end=1000.0, seed=2))
-        orders[lam] = tuple(c.variant.job_id for c in sched.commitments[:20])
+        # commit_log is the append-only audit trail; `commitments` holds only
+        # OUTSTANDING commitments (settled ones are pruned)
+        orders[lam] = tuple(r.job_id for r in sched.commit_log[:20])
     assert orders[0.3] != orders[0.7], "λ must influence clearing decisions"
 
 
