@@ -19,6 +19,11 @@ Two classes of check:
       ROADMAP.md were measured on an unloaded host; under co-tenant load
       a 2-core runner cannot physically overlap, so CI does not gate at
       0.8 (tighten via ``BENCH_MAX_OVERLAP_RATIO`` on quiet runners).
+    - ``policy_clearing_*``: ``recovered_ok=True`` must hold — the
+      ``GlobalAssignment`` backend may never clear LESS total score than
+      ``GreedyWIS`` (its dominance contract is exact, no tolerance) —
+      and the deterministic ``recovered=`` score may not drop more than
+      ``tol`` below baseline.
 
 * **Absolute latency** (loose, default 5x via ``--us-tol``):
   ``us_per_call`` of gated rows against baseline.  Shared CI runners and
@@ -45,7 +50,8 @@ import os
 import re
 import sys
 
-GATED_PREFIXES = ("round_throughput_", "score_dispatch_", "pipeline_overlap_")
+GATED_PREFIXES = ("round_throughput_", "score_dispatch_", "pipeline_overlap_",
+                  "policy_clearing_")
 
 
 def _load(path: str) -> dict:
@@ -55,7 +61,7 @@ def _load(path: str) -> dict:
 
 
 def _field(row: dict, key: str):
-    m = re.search(rf"\b{key}=([0-9.]+)", row.get("derived", ""))
+    m = re.search(rf"\b{key}=(-?[0-9.]+)", row.get("derived", ""))
     return float(m.group(1)) if m else None
 
 
@@ -85,6 +91,18 @@ def check(fresh: dict, baseline: dict, tol: float, us_tol: float,
                 failures.append(
                     f"{name}: speedup {sp:.2f}x vs baseline {base_sp:.2f}x "
                     f"(-{(1 - sp / base_sp) * 100:.0f}% > {tol * 100:.0f}% tolerance)")
+
+        if name.startswith("policy_clearing_"):
+            if "recovered_ok=True" not in row.get("derived", ""):
+                failures.append(
+                    f"{name}: GlobalAssignment cleared less than greedy "
+                    f"(recovered_ok!=True): {row.get('derived')!r}")
+            base_rec, rec = _field(base_row, "recovered"), _field(row, "recovered")
+            if base_rec and rec is not None and rec < base_rec * (1.0 - tol):
+                failures.append(
+                    f"{name}: recovered score {rec:.4f} vs baseline "
+                    f"{base_rec:.4f} (-{(1 - rec / base_rec) * 100:.0f}% > "
+                    f"{tol * 100:.0f}% tolerance)")
 
         if name.startswith("pipeline_overlap_"):
             if "identical_selections=True" not in row.get("derived", ""):

@@ -11,6 +11,8 @@ quantitative study.  Prints ``name,us_per_call,derived`` CSV rows.
   atomization_ft         SJA thesis: work lost under failures vs monolithic
   round_throughput       round-batched clearing vs the single-window loop
                          (bids cleared/sec vs pool size — the PR 1 tentpole)
+  policy_clearing        GreedyWIS vs GlobalAssignment backends on a
+                         conflict-heavy pool: recovered utility + wall-clock
   score_dispatch         zero-recompile scoring: per-round latency + retrace
                          count across drifting M / λ / heterogeneous capacities
   pipeline_overlap       double-buffered round pipelining vs serial clearing
@@ -339,6 +341,102 @@ def bench_round_throughput():
 
 
 # ---------------------------------------------------------------------------
+# policy-driven clearing: greedy vs global assignment (the PR 3 tentpole)
+# ---------------------------------------------------------------------------
+
+def bench_policy_clearing():
+    """Recovered utility + wall-clock: GreedyWIS vs GlobalAssignment.
+
+    Builds windows sharing ONE time range across slices and a pool in which
+    each job bids the same time span on several slices — exactly the
+    cross-window conflict pattern ``run_round`` produces when agents answer
+    the full window set.  Greedy conflict resolution keeps each job's
+    best-scored win and re-clears; the assignment backend searches which
+    window each conflicted job should keep.  The bench asserts
+    ``GlobalAssignment`` total ≥ ``GreedyWIS`` total (the backend's
+    dominance contract — CI-gated via ``recovered_ok``) and emits the
+    recovered score plus both backends' wall-clock.
+    """
+    from repro.core import ScoringPolicy, Window, clear_round
+    from repro.core.policy import GlobalAssignment, GreedyWIS
+    from repro.core.trp import fmp_standard
+    from repro.core.types import Variant
+
+    GB = 1 << 30
+    policy = ScoringPolicy()
+    rng = np.random.default_rng(13)
+    n_windows = 6
+    # one shared time range: bids on different slices CAN overlap in time,
+    # so multi-slice bidders conflict by construction
+    windows = [Window(slice_id=f"s{k}", capacity=(6 + 2 * k) * GB,
+                      t_min=0.0, duration=200.0) for k in range(n_windows)]
+
+    def make_pool(m: int):
+        n_jobs = max(6, m // 12)
+        fmps = [fmp_standard(1 * GB, (1.5 + 2.5 * rng.uniform()) * GB, 0.2 * GB)
+                for _ in range(n_jobs)]
+        ages = {f"J{j}": float(rng.uniform(0, 1)) for j in range(n_jobs)}
+        pool = []
+        while len(pool) < m:
+            j = int(rng.integers(0, n_jobs))
+            t0 = float(rng.uniform(0, 140.0))
+            dur = float(rng.uniform(5.0, min(60.0, 200.0 - t0)))
+            # the same span bid on 2-3 slices (one bid per window max)
+            for k in rng.choice(n_windows, size=int(rng.integers(2, 4)),
+                                replace=False):
+                if len(pool) >= m:
+                    break
+                pool.append(Variant(
+                    job_id=f"J{j}", slice_id=f"s{k}", t_start=t0,
+                    duration=dur, fmp=fmps[j],
+                    local_utility=float(rng.uniform(0.1, 0.9)),
+                    declared_features={}, payload={"work": dur},
+                    variant_id=f"J{j}/s{k}/v{len(pool)}"))
+        return pool, ages
+
+    sizes = (256,) if QUICK else (256, 1024)
+    reps = 5 if QUICK else 7
+    greedy_backend, ga_backend = GreedyWIS(), GlobalAssignment()
+    for m in sizes:
+        pool, ages = make_pool(m)
+
+        def greedy():
+            return clear_round(windows, pool, policy, ages=ages,
+                               clearing=greedy_backend)
+
+        def global_assign():
+            return clear_round(windows, pool, policy, ages=ages,
+                               clearing=ga_backend)
+
+        g, a = greedy(), global_assign()
+        recovered = a.total_score - g.total_score
+        ok = recovered >= -1e-9
+        # the backend's dominance contract: fail CI smoke loudly if the
+        # assignment search ever clears less than greedy
+        assert ok, (
+            f"GlobalAssignment lost score at M={m}: "
+            f"{a.total_score:.6f} < {g.total_score:.6f}")
+
+        # ABBA-paired minima (see round_throughput): sandbox jitter only
+        # inflates samples, so per-variant minima compare capabilities
+        us_g_r, us_a_r = [], []
+        for i in range(reps):
+            first, second = (greedy, global_assign) if i % 2 == 0 else \
+                (global_assign, greedy)
+            x = _time(first, n=1, warmup=0)
+            y = _time(second, n=1, warmup=0)
+            gg, aa = (x, y) if i % 2 == 0 else (y, x)
+            us_g_r.append(gg)
+            us_a_r.append(aa)
+        us_g, us_a = min(us_g_r), min(us_a_r)
+        emit(f"policy_clearing_M{m}", us_a,
+             f"greedy_us={us_g:.0f} overhead={us_a / max(us_g, 1e-9):.2f}x "
+             f"greedy_total={g.total_score:.4f} "
+             f"global_total={a.total_score:.4f} recovered={recovered:.4f} "
+             f"conflicts={g.n_conflicts} recovered_ok={ok}")
+
+
+# ---------------------------------------------------------------------------
 # zero-recompile scoring dispatch: runtime (λ, capacity, θ) + M-bucketing
 # ---------------------------------------------------------------------------
 
@@ -555,14 +653,15 @@ BENCHES: Dict[str, Callable] = {
     "window_policies": bench_window_policies,
     "atomization_ft": bench_atomization_ft,
     "round_throughput": bench_round_throughput,
+    "policy_clearing": bench_policy_clearing,
     "score_dispatch": bench_score_dispatch,
     "pipeline_overlap": bench_pipeline_overlap,
     "kernels": bench_kernels,
 }
 
 # CI smoke subset: fast, no multi-minute simulator sweeps
-QUICK_BENCHES = ("table3_clearing", "round_throughput", "score_dispatch",
-                 "pipeline_overlap", "kernels")
+QUICK_BENCHES = ("table3_clearing", "round_throughput", "policy_clearing",
+                 "score_dispatch", "pipeline_overlap", "kernels")
 
 
 def main() -> None:

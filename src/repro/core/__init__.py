@@ -8,10 +8,13 @@ Layer map (paper section → module):
   §4.2.1 calibration/trust      → calibration
   §4.3 temporal fairness        → fairness
   §4.4 WIS clearing             → wis, clearing
+  clearing objective + presets  → policy (ClearingPolicy backends, Policy)
   §3/§4 interaction cycle       → scheduler
   §6(a) quantitative study      → simulator, baselines
 """
 from .types import (  # noqa: F401
+    DEAD_WINDOW_EPS,
+    TIME_EPS,
     ClearingResult,
     Commitment,
     JobSpec,
@@ -58,6 +61,13 @@ from .windows import (  # noqa: F401
 from .atomizer import AtomizerConfig, ChunkPlan, chunk_candidates  # noqa: F401
 from .jobs import AgentConfig, JobAgent  # noqa: F401
 from .clearing import assign_bids, clear_round, clear_window, settle_round  # noqa: F401
+from .policy import (  # noqa: F401
+    ClearingPolicy,
+    FairShare,
+    GlobalAssignment,
+    GreedyWIS,
+    Policy,
+)
 from .scheduler import CommitRecord, JasdaScheduler, SchedulerConfig  # noqa: F401
 from .pipeline import RoundPipeline, pipelined_clear_rounds  # noqa: F401
 from .simulator import SimConfig, SimResult, make_workload, simulate  # noqa: F401

@@ -40,11 +40,23 @@ __all__ = [
 
 
 class MonolithicScheduler:
-    """Common machinery: whole-job commitments on slice timelines."""
+    """Common machinery: whole-job commitments on slice timelines.
+
+    ``policy`` optionally accepts the same unified ``repro.core.policy.
+    Policy`` object JASDA takes, so comparison sweeps can hand every system
+    one configuration: monolithic baselines have no variants to clear, so
+    only the safety bound applies (a scheduler-wide ``recheck_theta``
+    overrides ``theta``, mirroring JASDA's precedence); everything else is
+    ignored by construction.
+    """
 
     name = "monolithic"
 
-    def __init__(self, slices: Sequence[SliceSpec], *, theta: float = 0.05):
+    def __init__(self, slices: Sequence[SliceSpec], *, theta: float = 0.05,
+                 policy=None):
+        if policy is not None and getattr(policy, "recheck_theta", None) is not None:
+            theta = policy.recheck_theta
+        self.policy = policy
         self.slices: Dict[str, SliceTimeline] = {
             s.slice_id: SliceTimeline(s) for s in slices
         }

@@ -16,21 +16,29 @@ the optimal WIS selection per window plus cross-window conflict resolution:
           until a fixed point (bans grow monotonically, so ≤ |V| passes).
     13:   commit ∪_w Ŝ_w, update layout and statistics (scheduler.py)
 
+Steps 12/12b — the clearing OBJECTIVE — are owned by a pluggable
+:class:`repro.core.policy.ClearingPolicy` backend: :func:`clear_round` and
+:func:`settle_round` dispatch through the ``clearing`` argument (default
+``GreedyWIS``, byte-identical to the historical hardwired path) rather than
+baking one strategy in.  See ``repro.core.policy`` for the shipped backends
+(``GreedyWIS`` / ``GlobalAssignment`` / ``FairShare``) and the unified
+``Policy`` presets.
+
 :func:`clear_window` is the single-window special case (the paper's original
 Algorithm 1) and remains the numpy reference path; the scheduler's ``step()``
 compatibility wrapper and the equivalence tests pin round == legacy on one
-window.  Both functions are pure given their inputs; state mutation (commit,
+window.  All functions are pure given their inputs; state mutation (commit,
 age updates, calibration) is the scheduler's job.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Callable, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .scoring import ScoringPolicy, score_pool, score_round_async
-from .types import ClearingResult, PoolView, RoundResult, Variant, Window
+from .types import (OVERLAP_EPS, TIME_EPS, ClearingResult, PoolView,
+                    RoundResult, Variant, Window)
 from .wis import wis_select
 
 __all__ = ["clear_window", "clear_round", "assign_bids", "settle_round"]
@@ -76,7 +84,7 @@ def clear_window(
     )
 
 
-def _fits(v: Variant, w: Window, eps: float = 1e-9) -> bool:
+def _fits(v: Variant, w: Window, eps: float = TIME_EPS) -> bool:
     """Clearing-side sanity: variant must lie inside the announced window."""
     return (
         v.slice_id == w.slice_id
@@ -86,7 +94,7 @@ def _fits(v: Variant, w: Window, eps: float = 1e-9) -> bool:
     )
 
 
-def _overlap(a: Variant, b: Variant, eps: float = 1e-12) -> bool:
+def _overlap(a: Variant, b: Variant, eps: float = OVERLAP_EPS) -> bool:
     return a.t_start < b.t_end - eps and b.t_start < a.t_end - eps
 
 
@@ -116,7 +124,7 @@ def assign_bids(
     codes = np.asarray(
         [slice_code.get(s, -1) for s in view.slice_ids], np.intp
     )
-    eps = 1e-9
+    eps = TIME_EPS
     assigned = np.full(m, -1, np.intp)
     for k, w in enumerate(windows):
         mask = (
@@ -140,6 +148,19 @@ def _empty_round(windows: Sequence[Window]) -> RoundResult:
     return RoundResult(tuple(windows), tuple(empty), (), (), 0.0, 0)
 
 
+def _default_clearing():
+    """Module-level GreedyWIS singleton (lazy: avoids an import cycle)."""
+    global _GREEDY
+    if _GREEDY is None:
+        from .policy import GreedyWIS
+
+        _GREEDY = GreedyWIS()
+    return _GREEDY
+
+
+_GREEDY = None
+
+
 def clear_round(
     windows: Sequence[Window],
     variants: Sequence[Variant],
@@ -151,25 +172,28 @@ def clear_round(
     work_budget: Optional[Mapping[str, float]] = None,
     score_impl: Optional[str] = None,
     recheck_theta: Optional[float] = None,
+    per_agent_theta: bool = False,
     grid: int = 32,
     grid_cache=None,
+    clearing=None,
 ) -> RoundResult:
     """Clear one batched auction round over ALL announced windows.
 
-    Scores the pooled bids in a single batched dispatch, runs WIS per window,
-    then resolves cross-window conflicts: a job that wins overlapping
-    intervals on two slices keeps only its best-scored win, and (when
-    ``work_budget`` maps job_id → biddable work) a job never wins more total
-    work than it has — over-budget wins are revoked cheapest-first.  Windows
-    that lose a winner are re-cleared against their remaining candidates
-    within the round, iterating to a fixed point.
+    Scores the pooled bids in a single batched dispatch, then settles the
+    round through the ``clearing`` backend (a ``repro.core.policy.
+    ClearingPolicy``; default ``GreedyWIS`` — per-window WIS plus greedy
+    cross-window conflict resolution, byte-identical to the historical
+    behavior).  ``work_budget`` maps job_id → biddable work so a job never
+    wins more total work than it has.
 
     ``recheck_theta`` re-verifies safety condition (a) in-dispatch against
-    each bid's own window capacity (scoring.score_round); ``grid_cache``
-    reuses FMP grid discretizations across rounds.  The dispatch/settle
-    halves are exposed separately (:func:`assign_bids`, scoring's
-    ``score_round_async``, :func:`settle_round`) so the round pipeline can
-    overlap them across consecutive rounds.
+    each bid's own window capacity (scoring.score_round);
+    ``per_agent_theta`` uses each bid's OWN agent θ (``Variant.theta``)
+    instead of one scheduler-wide bound.  ``grid_cache`` reuses FMP grid
+    discretizations across rounds.  The dispatch/settle halves are exposed
+    separately (:func:`assign_bids`, scoring's ``score_round_async``,
+    :func:`settle_round`) so the round pipeline can overlap them across
+    consecutive rounds.
 
     Returns a :class:`RoundResult`; ``results`` aligns with ``windows``.
     """
@@ -185,12 +209,14 @@ def clear_round(
     handle = score_round_async(
         fit, windows, win_idx, policy,
         ages=ages, calibrate=calibrate, impl=score_impl,
-        recheck_theta=recheck_theta, grid=grid, grid_cache=grid_cache,
+        recheck_theta=recheck_theta, per_agent_theta=per_agent_theta,
+        grid=grid, grid_cache=grid_cache,
         view=fit_view,
     )
     return settle_round(
         windows, fit, win_idx, handle.result(),
         selector=selector, work_budget=work_budget, view=fit_view,
+        clearing=clearing, ages=ages,
     )
 
 
@@ -203,107 +229,20 @@ def settle_round(
     selector: Callable = wis_select,
     work_budget: Optional[Mapping[str, float]] = None,
     view: Optional[PoolView] = None,
+    clearing=None,
+    ages: Optional[Mapping[str, float]] = None,
 ) -> RoundResult:
-    """The post-scores half of :func:`clear_round`: WIS per window plus
-    cross-window conflict resolution to a fixed point (Algorithm 1 line 12
-    and step 12b).  Pure given its inputs; the pipeline calls it once the
-    in-flight scores of a dispatched round materialize.  ``view`` (the
-    struct-of-arrays form of ``fit`` from :func:`assign_bids`) lets the
-    per-window WIS passes gather interval arrays instead of re-walking the
-    variant objects.
+    """The post-scores half of :func:`clear_round`, dispatched through the
+    ``clearing`` backend (default ``GreedyWIS``): WIS per window plus
+    cross-window conflict resolution (Algorithm 1 line 12 and step 12b).
+    Pure given its inputs; the pipeline calls it once the in-flight scores
+    of a dispatched round materialize.  ``view`` (the struct-of-arrays form
+    of ``fit`` from :func:`assign_bids`) lets the per-window WIS passes
+    gather interval arrays instead of re-walking the variant objects;
+    ``ages`` feeds fairness-aware backends (ignored by ``GreedyWIS``).
     """
-    windows = list(windows)
-    if not fit:
-        return _empty_round(windows)
-    if view is None:
-        view = PoolView.build(fit)
-
-    members: List[List[int]] = [[] for _ in windows]  # window -> pool indices
-    for i, k in enumerate(win_idx):
-        members[k].append(i)
-
-    banned = np.zeros(len(fit), dtype=bool)
-    selected_per_window: List[List[int]] = [[] for _ in windows]
-    dirty = list(range(len(windows)))
-    n_conflicts = 0
-
-    def _reclear(k: int) -> None:
-        idx = [i for i in members[k] if not banned[i]]
-        if not idx:
-            selected_per_window[k] = []
-            return
-        ia = np.asarray(idx, np.intp)
-        sel, _ = selector(view.t_start[ia], view.t_end[ia], scores[ia])
-        selected_per_window[k] = [idx[int(j)] for j in np.asarray(sel)]
-
-    # fixed point: each pass bans ≥ 1 variant or terminates, so the loop is
-    # bounded by the pool size
-    while True:
-        for k in dirty:
-            _reclear(k)
-        dirty = []
-
-        # per-job win lists across all windows, best score first
-        wins_by_job: Dict[str, List[int]] = {}
-        for k, sel in enumerate(selected_per_window):
-            for i in sel:
-                wins_by_job.setdefault(fit[i].job_id, []).append(i)
-        newly_banned = False
-        for job_id, wins in wins_by_job.items():
-            if len(wins) < 2 and work_budget is None:
-                continue
-            wins.sort(key=lambda i: (-scores[i], fit[i].t_start, win_idx[i]))
-            kept: List[int] = []
-            used_work = 0.0
-            budget = None
-            if work_budget is not None:
-                budget = work_budget.get(job_id)
-            for i in wins:
-                drop = any(_overlap(fit[i], fit[j]) and win_idx[i] != win_idx[j]
-                           for j in kept)
-                if not drop and budget is not None:
-                    work = float(fit[i].payload["work"]) if fit[i].payload else 0.0
-                    if used_work + work > budget + 1e-9:
-                        drop = True
-                    else:
-                        used_work += work
-                if drop:
-                    banned[i] = True
-                    newly_banned = True
-                    n_conflicts += 1
-                    if win_idx[i] not in dirty:
-                        dirty.append(win_idx[i])
-                else:
-                    kept.append(i)
-        if not newly_banned:
-            break
-
-    # -- package per-window results + the flattened commit set ----------------
-    results: List[ClearingResult] = []
-    all_selected: List[Variant] = []
-    all_scores: List[float] = []
-    for k, w in enumerate(windows):
-        sel = sorted(selected_per_window[k], key=lambda i: fit[i].t_start)
-        sel_set = set(sel)
-        rejected = tuple(fit[i] for i in members[k] if i not in sel_set)
-        results.append(
-            ClearingResult(
-                window=w,
-                selected=tuple(fit[i] for i in sel),
-                scores=tuple(float(scores[i]) for i in sel),
-                total_score=float(sum(scores[i] for i in sel)),
-                n_bids=len(members[k]),
-                rejected=rejected,
-            )
-        )
-        all_selected.extend(fit[i] for i in sel)
-        all_scores.extend(float(scores[i]) for i in sel)
-    return RoundResult(
-        windows=tuple(windows),
-        results=tuple(results),
-        selected=tuple(all_selected),
-        scores=tuple(all_scores),
-        total_score=float(sum(all_scores)),
-        n_bids=len(fit),
-        n_conflicts=n_conflicts,
+    backend = clearing if clearing is not None else _default_clearing()
+    return backend.settle(
+        windows, fit, win_idx, scores,
+        selector=selector, work_budget=work_budget, view=view, ages=ages,
     )

@@ -30,7 +30,7 @@ import numpy as np
 from .atomizer import AtomizerConfig, chunk_candidates
 from .scoring import JobFeatures
 from .trp import PhaseFMP, is_safe
-from .types import JobSpec, JobState, Variant, Window
+from .types import OVERLAP_EPS, JobSpec, JobState, Variant, Window
 
 __all__ = ["JobAgent", "AgentConfig"]
 
@@ -97,7 +97,7 @@ class JobAgent:
     def _overlaps_own(self, t_start: float, duration: float) -> bool:
         t_end = t_start + duration
         for s, e in self.committed_intervals:
-            if t_start < e - 1e-12 and s < t_end - 1e-12:
+            if t_start < e - OVERLAP_EPS and s < t_end - OVERLAP_EPS:
                 return True
         return False
 
@@ -260,6 +260,9 @@ class JobAgent:
                 "true_features": feats,  # ground truth (≠ declared if misreporting)
             },
             variant_id=vid,
+            # the agent's OWN risk bound rides along so the in-dispatch
+            # safety recheck can verify per-agent θ (PackedRound.thetas)
+            theta=self.cfg.theta,
         )
 
     # -- truthful feature values (what an honest job declares) ----------------

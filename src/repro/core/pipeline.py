@@ -45,6 +45,11 @@ from .clearing import assign_bids, settle_round
 from .scoring import ScoringPolicy, score_round_async
 from .types import RoundResult, Variant, Window
 
+# NOTE: scheduler-level pipelining (RoundPipeline) needs no policy plumbing
+# of its own — JasdaScheduler._settle_round dispatches through the
+# scheduler's Policy.clearing backend, so speculation replays identically
+# under ANY backend (settle is pure given its inputs).
+
 __all__ = ["RoundPipeline", "pipelined_clear_rounds"]
 
 
@@ -172,9 +177,11 @@ def pipelined_clear_rounds(
     calibrate=None,
     score_impl: Optional[str] = None,
     recheck_theta: Optional[float] = None,
+    per_agent_theta: bool = False,
     grid: int = 32,
     grid_cache=None,
     work_budget=None,
+    clearing=None,
 ) -> List[RoundResult]:
     """Clear a stream of independent rounds with dispatch/settle overlap.
 
@@ -183,6 +190,9 @@ def pipelined_clear_rounds(
     benchmark), but round k+1's host packing and round k's WIS clearing
     both run while round k(/k+1)'s device scoring is in flight.  Up to two
     rounds are queued on device at any time (double buffering).
+    ``clearing`` selects the settle backend (``repro.core.policy.
+    ClearingPolicy``; None = GreedyWIS) — the overlap structure is
+    backend-agnostic because settle is pure given its inputs.
     """
     results: List[RoundResult] = []
     pending = None  # (windows, fit, win_idx, handle)
@@ -195,7 +205,8 @@ def pipelined_clear_rounds(
             handle = score_round_async(
                 fit, windows, win_idx, policy,
                 ages=ages, calibrate=calibrate, impl=score_impl,
-                recheck_theta=recheck_theta, grid=grid, grid_cache=grid_cache,
+                recheck_theta=recheck_theta, per_agent_theta=per_agent_theta,
+                grid=grid, grid_cache=grid_cache,
                 view=fit_view,
             )
         return windows, fit, win_idx, fit_view, handle
@@ -204,7 +215,8 @@ def pipelined_clear_rounds(
         windows, fit, win_idx, fit_view, handle = entry
         scores = handle.result() if handle is not None else np.zeros(0)
         return settle_round(windows, fit, win_idx, scores,
-                            work_budget=work_budget, view=fit_view)
+                            work_budget=work_budget, view=fit_view,
+                            clearing=clearing, ages=ages)
 
     for windows, pool in rounds:
         entry = dispatch(windows, pool)  # host pack + async device dispatch

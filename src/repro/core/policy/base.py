@@ -1,0 +1,257 @@
+"""The ``ClearingPolicy`` protocol: the round-clearing objective as an API.
+
+The paper's scheduler performs *policy-driven clearing that balances
+utilization, fairness, and temporal responsiveness*; fragmentation-aware
+MIG schedulers (arXiv:2512.16099, arXiv:2511.18906) show that the CHOICE of
+clearing objective is exactly where those trade-offs are won.  This module
+makes the objective a first-class, swappable backend instead of a strategy
+baked into free functions:
+
+* a :class:`ClearingPolicy` owns the post-scores half of an auction round —
+  per-window selection, cross-window conflict resolution, and tie-breaking
+  (Algorithm 1 line 12 + step 12b);
+* :func:`fixed_point_settle` is the shared machinery every shipped backend
+  builds on: optimal WIS per window plus an iterated conflict-resolution
+  loop, parameterized by (a) the scores used for SELECTION (which may be a
+  fairness-transformed copy of the reported auction scores) and (b) a
+  per-job keep-preference used when revoking conflicting wins (which is how
+  a global assignment overrides the greedy keep-best rule).
+
+Shipped backends (one module each):
+
+* :class:`~repro.core.policy.greedy.GreedyWIS` — the default; byte-identical
+  to the PR-1/PR-2 semantics (keep best-scored win, re-clear to fixed point).
+* :class:`~repro.core.policy.assignment.GlobalAssignment` — searches
+  assignments of conflicting jobs to windows (Hungarian seed + exhaustive /
+  coordinate-descent refinement) and never clears less total score than
+  greedy.
+* :class:`~repro.core.policy.fairshare.FairShare` — age/Jain-weighted
+  selection: starved jobs are boosted and multi-win jobs discounted so wins
+  spread across jobs.
+
+State mutation (commit, ages, calibration) stays the scheduler's job; a
+backend is pure given its inputs, which is what lets the round pipeline
+replay speculative rounds under ANY policy.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Callable, Dict, List, Mapping, Optional, Sequence
+
+import numpy as np
+
+from ..types import PoolView, RoundResult, Variant, Window
+from ..wis import wis_select
+
+__all__ = ["ClearingPolicy", "fixed_point_settle"]
+
+
+class ClearingPolicy(abc.ABC):
+    """Owns one auction round's clearing objective (selection + conflicts).
+
+    Implementations must be frozen dataclasses (hashable, comparable) so a
+    :class:`~repro.core.policy.presets.Policy` embedding one stays a value
+    object.  ``settle`` must be pure given its inputs — the round pipeline
+    relies on replayability.
+    """
+
+    #: short stable identifier used in logs / benchmark rows
+    name: str = "abstract"
+
+    @abc.abstractmethod
+    def settle(
+        self,
+        windows: Sequence[Window],
+        fit: Sequence[Variant],
+        win_idx: Sequence[int],
+        scores: np.ndarray,
+        *,
+        selector: Callable = wis_select,
+        work_budget: Optional[Mapping[str, float]] = None,
+        view: Optional[PoolView] = None,
+        ages: Optional[Mapping[str, float]] = None,
+    ) -> RoundResult:
+        """Clear the scored pool: WIS per window + cross-window resolution.
+
+        ``scores`` are the auction scores reported in the result (commit
+        scores, totals); a backend may SELECT on a transformed copy but must
+        report the raw values so totals stay comparable across backends.
+        ``ages`` maps job_id → A_i(t) ∈ [0,1] for fairness-aware backends.
+        """
+
+    def clear_round(
+        self,
+        windows: Sequence[Window],
+        variants: Sequence[Variant],
+        scoring,
+        **kw,
+    ) -> RoundResult:
+        """Full-round convenience: score the pool, then settle through self.
+
+        Accepts the same keyword arguments as :func:`repro.core.clearing.
+        clear_round` (ages, calibrate, score_impl, recheck_theta,
+        per_agent_theta, work_budget, ...).
+        """
+        from ..clearing import clear_round as _clear_round
+
+        return _clear_round(windows, variants, scoring, clearing=self, **kw)
+
+
+def _empty_round(windows: Sequence[Window]) -> RoundResult:
+    from ..clearing import _empty_round as _impl
+
+    return _impl(windows)
+
+
+def fixed_point_settle(
+    windows: Sequence[Window],
+    fit: Sequence[Variant],
+    win_idx: Sequence[int],
+    scores: np.ndarray,
+    *,
+    selector: Callable = wis_select,
+    work_budget: Optional[Mapping[str, float]] = None,
+    view: Optional[PoolView] = None,
+    select_scores: Optional[np.ndarray] = None,
+    prefer: Optional[Mapping[str, int]] = None,
+    first_pass_sink: Optional[List[List[int]]] = None,
+) -> RoundResult:
+    """WIS per window + iterated cross-window conflict resolution.
+
+    The shared clearing core (Algorithm 1 line 12 and step 12b): each window
+    is cleared optimally over its unbanned candidates, then per-job win
+    lists across windows are scanned for conflicts — a job holding
+    overlapping intervals on two slices, or (with ``work_budget``) more
+    total work than it has — and conflicting wins are revoked.  Windows that
+    lose a winner are re-cleared within the round; bans grow monotonically,
+    so the loop reaches a fixed point in ≤ |pool| passes.
+
+    Hooks the backends compose:
+
+    * ``select_scores`` — scores used for SELECTION (WIS weights and the
+      keep-priority order in conflict resolution).  Defaults to ``scores``;
+      :class:`FairShare` passes an age-boosted transform here while the
+      reported ``scores`` stay the raw auction values.
+    * ``prefer`` — maps job_id → pool index (or tuple of indices, one per
+      disjoint conflict cluster) to keep FIRST when that job's wins
+      conflict, overriding the greedy best-score-first rule.  This is the
+      primitive :class:`GlobalAssignment` drives its search with; with
+      ``prefer=None`` the keep order is exactly the PR-2 greedy semantics
+      (byte-identical, pinned by tests).
+    * ``first_pass_sink`` — when given a list, it receives the ban-free
+      first-pass selections (one list of pool indices per window) before
+      conflict resolution starts, so callers that need the pre-resolution
+      win structure (conflict-cluster discovery) don't re-run the
+      per-window WIS sweep.
+    """
+    windows = list(windows)
+    if not fit:
+        return _empty_round(windows)
+    if view is None:
+        view = PoolView.build(fit)
+    sel_scores = scores if select_scores is None else np.asarray(select_scores)
+
+    from ..clearing import _overlap
+
+    members: List[List[int]] = [[] for _ in windows]  # window -> pool indices
+    for i, k in enumerate(win_idx):
+        members[k].append(i)
+
+    banned = np.zeros(len(fit), dtype=bool)
+    selected_per_window: List[List[int]] = [[] for _ in windows]
+    dirty = list(range(len(windows)))
+    n_conflicts = 0
+
+    def _reclear(k: int) -> None:
+        idx = [i for i in members[k] if not banned[i]]
+        if not idx:
+            selected_per_window[k] = []
+            return
+        ia = np.asarray(idx, np.intp)
+        sel, _ = selector(view.t_start[ia], view.t_end[ia], sel_scores[ia])
+        selected_per_window[k] = [idx[int(j)] for j in np.asarray(sel)]
+
+    # fixed point: each pass bans ≥ 1 variant or terminates, so the loop is
+    # bounded by the pool size
+    first_pass = True
+    while True:
+        for k in dirty:
+            _reclear(k)
+        dirty = []
+        if first_pass:
+            first_pass = False
+            if first_pass_sink is not None:
+                first_pass_sink.extend(list(s) for s in selected_per_window)
+
+        # per-job win lists across all windows, best score first (preferred
+        # win first when the backend pinned one)
+        wins_by_job: Dict[str, List[int]] = {}
+        for k, sel in enumerate(selected_per_window):
+            for i in sel:
+                wins_by_job.setdefault(fit[i].job_id, []).append(i)
+        newly_banned = False
+        for job_id, wins in wins_by_job.items():
+            if len(wins) < 2 and work_budget is None:
+                continue
+            pin = prefer.get(job_id) if prefer is not None else None
+            pins = (() if pin is None
+                    else (int(pin),) if isinstance(pin, (int, np.integer))
+                    else tuple(int(p) for p in pin))
+            wins.sort(key=lambda i: (0 if i in pins else 1,
+                                     -sel_scores[i], fit[i].t_start, win_idx[i]))
+            kept: List[int] = []
+            used_work = 0.0
+            budget = None
+            if work_budget is not None:
+                budget = work_budget.get(job_id)
+            for i in wins:
+                drop = any(_overlap(fit[i], fit[j]) and win_idx[i] != win_idx[j]
+                           for j in kept)
+                if not drop and budget is not None:
+                    work = float(fit[i].payload["work"]) if fit[i].payload else 0.0
+                    if used_work + work > budget + 1e-9:
+                        drop = True
+                    else:
+                        used_work += work
+                if drop:
+                    banned[i] = True
+                    newly_banned = True
+                    n_conflicts += 1
+                    if win_idx[i] not in dirty:
+                        dirty.append(win_idx[i])
+                else:
+                    kept.append(i)
+        if not newly_banned:
+            break
+
+    # -- package per-window results + the flattened commit set ----------------
+    from ..types import ClearingResult
+
+    results: List[ClearingResult] = []
+    all_selected: List[Variant] = []
+    all_scores: List[float] = []
+    for k, w in enumerate(windows):
+        sel = sorted(selected_per_window[k], key=lambda i: fit[i].t_start)
+        sel_set = set(sel)
+        rejected = tuple(fit[i] for i in members[k] if i not in sel_set)
+        results.append(
+            ClearingResult(
+                window=w,
+                selected=tuple(fit[i] for i in sel),
+                scores=tuple(float(scores[i]) for i in sel),
+                total_score=float(sum(scores[i] for i in sel)),
+                n_bids=len(members[k]),
+                rejected=rejected,
+            )
+        )
+        all_selected.extend(fit[i] for i in sel)
+        all_scores.extend(float(scores[i]) for i in sel)
+    return RoundResult(
+        windows=tuple(windows),
+        results=tuple(results),
+        selected=tuple(all_selected),
+        scores=tuple(all_scores),
+        total_score=float(sum(all_scores)),
+        n_bids=len(fit),
+        n_conflicts=n_conflicts,
+    )

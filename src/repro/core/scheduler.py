@@ -1,6 +1,17 @@
 """The JASDA scheduler (paper §3), refactored to batched auction rounds.
 
-``JasdaScheduler`` owns the control plane.  One :meth:`JasdaScheduler.run_round`
+``JasdaScheduler`` owns the control plane.  It is configured by ONE unified
+``repro.core.policy.Policy`` value — scoring weights, window ordering, age
+curve, calibration, θ-recheck mode AND the pluggable clearing backend
+(``GreedyWIS`` / ``GlobalAssignment`` / ``FairShare``) — constructed
+directly (``JasdaScheduler(slices, Policy.utilization())``) or via the
+named presets.  The legacy ``SchedulerConfig`` still works: its scattered
+policy fragments are converted with :meth:`SchedulerConfig.to_policy` (a
+DeprecationWarning points at the Policy API), and runtime knobs
+(dead-window cooldown, score backend override, log caps, cache sizes) stay
+on ``SchedulerConfig`` either way.
+
+One :meth:`JasdaScheduler.run_round`
 drives the paper's five-step cycle over ALL open capacity at once:
 
   * announce every eligible window across every slice   (windows.py, step 1)
@@ -38,17 +49,20 @@ ex-post measurements.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from .calibration import CalibrationConfig, Calibrator
-from .clearing import assign_bids, settle_round
+from .clearing import assign_bids
 from .fairness import AgePolicy, AgeTracker
 from .jobs import JobAgent
+from .policy import ClearingPolicy, GreedyWIS, Policy
 from .scoring import ScoringPolicy, score_round_async
-from .types import ClearingResult, Commitment, JobSpec, RoundResult, SliceSpec, Variant, Window
+from .types import (DEAD_WINDOW_EPS, ClearingResult, Commitment, JobSpec,
+                    RoundResult, SliceSpec, Variant, Window)
 from .windows import (DeadWindowRegistry, SliceTimeline, WindowPolicy,
                       announce_window, announce_windows)
 
@@ -57,6 +71,18 @@ __all__ = ["JasdaScheduler", "SchedulerConfig", "CommitRecord", "RoundPrep"]
 
 @dataclass(frozen=True)
 class SchedulerConfig:
+    """Runtime knobs + (deprecated) scattered policy fragments.
+
+    The policy surface — scoring / window / age / calibration / clearing
+    backend / θ-recheck — now lives on the unified ``repro.core.policy.
+    Policy`` object; pass one straight to ``JasdaScheduler``.  The fragment
+    fields below keep working (converted via :meth:`to_policy`, with a
+    DeprecationWarning from the scheduler when overridden), so legacy
+    ``SchedulerConfig(scoring=..., window=...)`` construction is unchanged.
+    Runtime knobs (cooldowns, backend override, cache/log caps) are NOT part
+    of ``Policy`` and remain first-class here.
+    """
+
     scoring: ScoringPolicy = ScoringPolicy()
     window: WindowPolicy = WindowPolicy()
     calibration: CalibrationConfig = CalibrationConfig()
@@ -66,19 +92,83 @@ class SchedulerConfig:
     dead_window_cooldown: float = 8.0
     # epsilon for matching a re-derived gap against a suppressed window
     # (float drift from releases/early finishes must not resurrect it)
-    dead_window_eps: float = 1e-6
+    dead_window_eps: float = DEAD_WINDOW_EPS
     # batched-scoring backend override: None = auto (Pallas on TPU, jnp
     # reference elsewhere); "numpy" | "ref" | "pallas" to force
     score_impl: Optional[str] = None
     # re-verify safety condition (a) in-dispatch with this θ against each
     # bid's OWN window capacity (per-variant capacities; heterogeneous
     # slices).  None = off: generation already enforces condition (a).
+    # Scheduler-wide OVERRIDE: takes precedence over recheck_per_agent.
     recheck_theta: Optional[float] = None
+    # re-verify with each bid's OWN agent θ (Variant.theta → PackedRound.
+    # thetas) instead of one scheduler-wide bound
+    recheck_per_agent: bool = False
+    # round-clearing backend (repro.core.policy.ClearingPolicy); None =
+    # GreedyWIS (the historical greedy semantics, byte-identical)
+    clearing: Optional[ClearingPolicy] = None
     # bounded FMP-grid discretization cache (entries), scoped to this
     # scheduler instance — see kernels.jasda_score.ops.FMPGridCache
     grid_cache_size: int = 1024
     # cap on audit-trail rows (iteration log AND commit log); None = keep all
     max_log_rows: Optional[int] = None
+    # the unified Policy this config was built from (the BLESSED way to
+    # combine a Policy with runtime knobs — set directly or via
+    # :meth:`from_policy`).  When present it takes precedence over the
+    # legacy fragment fields above and suppresses the deprecation warning;
+    # a real dataclass field so ``dataclasses.replace`` preserves it.
+    policy: Optional[Policy] = None
+
+    def to_policy(self) -> Policy:
+        """The unified Policy: the ``policy`` field if set, else the lifted
+        legacy fragments."""
+        if self.policy is not None:
+            return self.policy
+        return Policy(
+            name="legacy",
+            scoring=self.scoring,
+            window=self.window,
+            age=self.age,
+            calibration=self.calibration,
+            clearing=self.clearing if self.clearing is not None else GreedyWIS(),
+            recheck_theta=self.recheck_theta,
+            per_agent_theta=self.recheck_per_agent,
+        )
+
+    def _policy_fragments_overridden(self) -> bool:
+        """True when legacy policy kwargs were used (→ deprecation path)."""
+        if self.policy is not None:
+            return False  # unified path: fragments only mirror the Policy
+        return (
+            self.scoring != ScoringPolicy()
+            or self.window != WindowPolicy()
+            or self.calibration != CalibrationConfig()
+            or self.age != AgePolicy()
+            or self.recheck_theta is not None
+            or self.recheck_per_agent
+            or self.clearing is not None
+        )
+
+    @classmethod
+    def from_policy(cls, policy: Policy, **runtime_kw) -> "SchedulerConfig":
+        """Mirror a Policy into a SchedulerConfig (runtime knobs as kwargs).
+
+        The fragment fields are populated for introspection, and the
+        ``policy`` field keeps the original object authoritative (preset
+        name included) — surviving ``dataclasses.replace`` and never
+        triggering the scattered-kwargs DeprecationWarning.
+        """
+        return cls(
+            scoring=policy.scoring,
+            window=policy.window,
+            calibration=policy.calibration,
+            age=policy.age,
+            recheck_theta=policy.recheck_theta,
+            recheck_per_agent=policy.per_agent_theta,
+            clearing=policy.clearing,
+            policy=policy,
+            **runtime_kw,
+        )
 
 
 @dataclass
@@ -147,19 +237,50 @@ class RoundPrep:
     view: object = None  # types.PoolView aligned with ``fit``
     bidders: int = 0
     budget: Dict[str, float] = field(default_factory=dict)
+    ages: Optional[Dict[str, float]] = None  # A_i(now), reused by settle
     handle: Optional[object] = None  # scoring.ScoreHandle
     stats_snap: Optional[Dict[str, Tuple[int, int]]] = None  # speculative only
 
 
 class JasdaScheduler:
-    def __init__(self, slices: Sequence[SliceSpec], config: SchedulerConfig = SchedulerConfig()):
-        self.config = config
+    def __init__(
+        self,
+        slices: Sequence[SliceSpec],
+        config: Union[SchedulerConfig, Policy, None] = None,
+    ):
+        """``config`` is a unified ``Policy`` (preferred) or a legacy
+        ``SchedulerConfig`` (deprecated when its policy fragments are
+        overridden; runtime knobs alone do not warn)."""
+        if config is None:
+            config = SchedulerConfig()
+        if isinstance(config, Policy):
+            self.policy = config
+            self.config = SchedulerConfig.from_policy(config)
+        elif isinstance(config, SchedulerConfig):
+            if config._policy_fragments_overridden():
+                warnings.warn(
+                    "configuring JasdaScheduler policy through scattered "
+                    "SchedulerConfig kwargs (scoring/window/age/calibration/"
+                    "recheck_theta/clearing) is deprecated; pass a unified "
+                    "repro.core.policy.Policy (e.g. Policy.utilization()) "
+                    "instead",
+                    DeprecationWarning,
+                    stacklevel=2,
+                )
+            # to_policy returns the authoritative ``policy`` field when set
+            # (preset name included); hand-built legacy configs are lifted
+            self.policy = config.to_policy()
+            self.config = config
+        else:
+            raise TypeError(
+                f"config must be a Policy or SchedulerConfig, got {type(config).__name__}"
+            )
         self.slices: Dict[str, SliceTimeline] = {
             s.slice_id: SliceTimeline(s) for s in slices
         }
         self.agents: Dict[str, JobAgent] = {}
-        self.calibrator = Calibrator(config.calibration)
-        self.ages = AgeTracker(config.age)
+        self.calibrator = Calibrator(self.policy.calibration)
+        self.ages = AgeTracker(self.policy.age)
         # outstanding commitments only; settled ones are pruned (complete/
         # fail/drop_slice) and survive as commit_log rows + running totals
         self.commitments: List[Commitment] = []
@@ -173,7 +294,7 @@ class JasdaScheduler:
         self._commit_index: Dict[int, Tuple[Commitment, CommitRecord]] = {}
         self.log: List[IterationLog] = []
         self.retired_intervals: Dict[str, List[Tuple[float, float]]] = {}
-        self._dead_windows = DeadWindowRegistry(eps=config.dead_window_eps)
+        self._dead_windows = DeadWindowRegistry(eps=self.config.dead_window_eps)
         # state version: bumped by EVERY mutation that could change what a
         # future round announces, who bids, or how bids are scored.  The
         # round pipeline validates speculative preparations against it.
@@ -182,7 +303,7 @@ class JasdaScheduler:
         # process-global lru_cache, which leaked grids across instances)
         from ..kernels.jasda_score.ops import FMPGridCache
 
-        self._grid_cache = FMPGridCache(maxsize=config.grid_cache_size)
+        self._grid_cache = FMPGridCache(maxsize=self.config.grid_cache_size)
 
     # -- membership -----------------------------------------------------------
     def add_job(self, agent: JobAgent, now: float) -> None:
@@ -259,7 +380,7 @@ class JasdaScheduler:
         """
         self._dead_windows.prune(now)
         window = announce_window(
-            self.slices, now, self.config.window, exclude=self._dead_windows
+            self.slices, now, self.policy.window, exclude=self._dead_windows
         )
         if window is None:
             self._append_log(IterationLog(now, None, 0, 0, 0, 0.0))
@@ -278,7 +399,7 @@ class JasdaScheduler:
         """
         self._dead_windows.prune(now)
         windows = announce_windows(
-            self.slices, now, self.config.window, exclude=self._dead_windows
+            self.slices, now, self.policy.window, exclude=self._dead_windows
         )
         if not windows:
             return RoundPrep(now=now, epoch=self._epoch, windows=[])
@@ -323,17 +444,19 @@ class JasdaScheduler:
         prep.budget = budget
         prep.fit, prep.win_idx, prep.view = assign_bids(prep.windows, pool)
         prep.handle = None
+        prep.ages = self.ages.ages(prep.now)
         if prep.fit:
             # Step 4a: ONE batched scoring dispatch, left in flight (JAX
             # async) — the settle half blocks on it; the pipeline overlaps
             # it with the next round's host work.
             prep.handle = score_round_async(
                 prep.fit, prep.windows, prep.win_idx,
-                self.config.scoring,
-                ages=self.ages.ages(prep.now),
+                self.policy.scoring,
+                ages=prep.ages,
                 calibrate=self.calibrator.calibrate,
                 impl=self.config.score_impl,
-                recheck_theta=self.config.recheck_theta,
+                recheck_theta=self.policy.recheck_theta,
+                per_agent_theta=self.policy.per_agent_theta,
                 grid_cache=self._grid_cache,
                 view=prep.view,
             )
@@ -344,10 +467,11 @@ class JasdaScheduler:
             self._append_log(IterationLog(prep.now, None, 0, 0, 0, 0.0))
             return None
         scores = prep.handle.result() if prep.handle is not None else np.zeros(0)
-        # Step 4b: WIS per window + cross-window conflict resolution.
-        rr = settle_round(
+        # Step 4b: selection + conflict resolution, dispatched through the
+        # configured clearing backend (Policy.clearing; GreedyWIS default).
+        rr = self.policy.clearing.settle(
             prep.windows, prep.fit, prep.win_idx, scores,
-            work_budget=prep.budget, view=prep.view,
+            work_budget=prep.budget, view=prep.view, ages=prep.ages,
         )
 
         # Step 5: commit winners; suppress windows that cleared empty.

@@ -288,6 +288,7 @@ def score_round_async(
     impl: Optional[str] = None,
     grid: int = 32,
     recheck_theta: Optional[float] = None,
+    per_agent_theta: bool = False,
     grid_cache=None,
     view=None,
 ) -> ScoreHandle:
@@ -312,11 +313,22 @@ def score_round_async(
         h = np.empty(m, dtype=np.float64)
         for i, v in enumerate(variants):
             h[i] = calibrate(v, v.local_utility) if calibrate is not None else v.local_utility
-    recheck = recheck_theta is not None
+    # θ precedence: a scheduler-wide recheck_theta overrides the per-agent
+    # bounds; per_agent_theta alone gathers each bid's OWN declared θ
+    # (Variant.theta, set from AgentConfig.theta at generation) into
+    # PackedRound.thetas so heterogeneous agents recheck heterogeneously.
+    recheck = recheck_theta is not None or per_agent_theta
+    if recheck_theta is not None:
+        theta = recheck_theta
+    elif per_agent_theta:
+        theta = (view.thetas if view is not None
+                 else np.asarray([v.theta for v in variants], np.float64))
+    else:
+        theta = 1.0
     packed = pool_to_arrays_round(
         variants, windows, np.asarray(win_idx), policy,
         h=h, ages=ages, grid=grid, pack_grids=recheck,
-        theta=recheck_theta if recheck else 1.0, cache=grid_cache,
+        theta=theta, cache=grid_cache,
         view=view,
     )
     if impl is None and m < SMALL_POOL_M:
@@ -360,6 +372,7 @@ def score_round(
     impl: Optional[str] = None,
     grid: int = 32,
     recheck_theta: Optional[float] = None,
+    per_agent_theta: bool = False,
     grid_cache=None,
     view=None,
 ) -> np.ndarray:
@@ -375,8 +388,11 @@ def score_round(
     Safety (condition (a)) was already enforced at variant generation; pass
     ``recheck_theta`` to RE-verify it in-dispatch against each bid's OWN
     window capacity (per-variant capacities, heterogeneous slices): unsafe
-    variants score 0 and never enter clearing.  All three backends (numpy /
-    jnp ref / Pallas) implement identical recheck semantics.
+    variants score 0 and never enter clearing.  ``per_agent_theta=True``
+    rechecks against each bid's OWN agent θ (``Variant.theta``) instead of
+    one scheduler-wide bound; an explicit ``recheck_theta`` overrides it.
+    All three backends (numpy / jnp ref / Pallas) implement identical
+    recheck semantics.
 
     ``win_idx[i]`` gives the index into ``windows`` that variant i bids on.
     ``impl``: None = auto (host numpy below ``SMALL_POOL_M`` bids, else
@@ -388,5 +404,6 @@ def score_round(
     return score_round_async(
         variants, windows, win_idx, policy,
         ages=ages, calibrate=calibrate, impl=impl, grid=grid,
-        recheck_theta=recheck_theta, grid_cache=grid_cache, view=view,
+        recheck_theta=recheck_theta, per_agent_theta=per_agent_theta,
+        grid_cache=grid_cache, view=view,
     ).result()

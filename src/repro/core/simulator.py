@@ -70,13 +70,22 @@ class SimResult:
     jct_per_job: Dict[str, float] = field(default_factory=dict)
     reliability: Dict[str, float] = field(default_factory=dict)
     iterations: int = 0
+    # names of the policy / clearing backend that produced this run (JASDA
+    # schedulers report Policy.name + ClearingPolicy.name; baselines their
+    # scheduler name) so preset sweeps stay self-describing
+    policy: str = ""
+    clearing: str = ""
 
     def summary(self) -> str:
+        tag = ""
+        if self.policy:
+            tag = f" policy={self.policy}" + (
+                f"/{self.clearing}" if self.clearing else "")
         return (
             f"util={self.utilization:.3f} meanJCT={self.mean_jct:.1f} "
             f"p95JCT={self.p95_jct:.1f} makespan={self.makespan:.1f} "
             f"jain={self.jain_slowdown:.3f} finished={self.n_finished}/{self.n_jobs} "
-            f"violations={self.capacity_violations}"
+            f"violations={self.capacity_violations}" + tag
         )
 
 
@@ -256,7 +265,15 @@ def simulate(
     jcts = np.array(list(jct.values())) if jct else np.array([np.nan])
     calibrator = getattr(scheduler, "calibrator", None)
     cal = calibrator.snapshot() if calibrator is not None else {}
+    # attribution: baselines carry a scheduler-identifying ``name`` class
+    # attribute and never dispatch through a clearing backend, so they
+    # report that name alone — even when handed a Policy for its θ — while
+    # JASDA schedulers report the Policy + backend that actually cleared
+    sched_name = getattr(scheduler, "name", "")
+    policy = None if sched_name else getattr(scheduler, "policy", None)
     return SimResult(
+        policy=sched_name or getattr(policy, "name", ""),
+        clearing=getattr(getattr(policy, "clearing", None), "name", ""),
         utilization=float(np.mean(list(per_slice.values()))) if per_slice else 0.0,
         per_slice_utilization=per_slice,
         mean_jct=float(np.nanmean(jcts)),

@@ -15,6 +15,38 @@ from typing import Any, Mapping, Optional, Sequence, Tuple
 import numpy as np
 
 # ---------------------------------------------------------------------------
+# Shared float tolerances
+# ---------------------------------------------------------------------------
+
+# ONE base tolerance for time/interval comparisons; the three tolerances the
+# clearing layer needs are all derived from it by fixed factors, replacing
+# what used to be unrelated hardcoded literals (1e-9 / 1e-12 / 1e-6) spread
+# across clearing.py and windows.py.  The derived values deliberately
+# preserve the historical semantics at each site (selections are pinned
+# byte-identical by tests), while making the relationships explicit:
+#
+#   OVERLAP_EPS (1e-3x) < TIME_EPS < DEAD_WINDOW_EPS (1e3x)
+#
+# i.e. the overlap predicate is STRICTER than window containment (a bid may
+# sit at a window boundary, but two bids must be cleanly disjoint), and
+# dead-window matching is LOOSER than both (it absorbs float drift
+# accumulated across whole release/early-finish/merge chains).
+TIME_EPS = 1e-9
+
+# Window-containment slack: clearing._fits / assign_bids / Window.contains
+# accept a bid protruding past an announced boundary by at most this much.
+# (This is the base constant itself; named uses below derive from it.)
+
+# Temporal-overlap strictness: clearing._overlap, types.overlaps, the WIS
+# brute-force oracle and the agents' own-interval checks treat two intervals
+# overlapping by less than this as disjoint.
+OVERLAP_EPS = 1e-3 * TIME_EPS
+
+# Dead-window matching tolerance: windows.DeadWindowRegistry defaults to
+# this (and SchedulerConfig.dead_window_eps mirrors it).
+DEAD_WINDOW_EPS = 1e3 * TIME_EPS
+
+# ---------------------------------------------------------------------------
 # Slices (the MIG analogue: a TPU mesh partition)
 # ---------------------------------------------------------------------------
 
@@ -59,7 +91,7 @@ class Window:
     def t_end(self) -> float:
         return self.t_min + self.duration
 
-    def contains(self, t_start: float, dur: float, *, eps: float = 1e-9) -> bool:
+    def contains(self, t_start: float, dur: float, *, eps: float = TIME_EPS) -> bool:
         return (t_start >= self.t_min - eps) and (t_start + dur <= self.t_end + eps)
 
 
@@ -87,6 +119,12 @@ class Variant:
     declared_features: Mapping[str, float] = field(default_factory=dict)
     payload: Any = None  # opaque subjob spec (e.g. a step-range chunk)
     variant_id: str = ""
+    # the bidding agent's declared capacity-violation risk bound θ (paper
+    # §4.1 condition (a)).  Carried per variant so the in-dispatch safety
+    # recheck can verify each bid against ITS OWN agent's θ
+    # (PackedRound.thetas); 1.0 = unconstrained (p_exceed ≤ 1 always holds),
+    # the right default for variants built outside a JobAgent.
+    theta: float = 1.0
 
     @property
     def t_end(self) -> float:
@@ -215,6 +253,7 @@ class PoolView:
     duration: np.ndarray  # (M,) float64
     t_end: np.ndarray  # (M,) float64
     local_utility: np.ndarray  # (M,) float64
+    thetas: np.ndarray  # (M,) float64 per-variant safety bound θ
     slice_ids: list  # per-variant slice id strings
     job_ids: list  # per-variant job id strings
     fmps: list  # per-variant FMP references
@@ -223,17 +262,19 @@ class PoolView:
     def build(cls, variants: Sequence[Variant]) -> "PoolView":
         if not variants:
             z = np.zeros(0, np.float64)
-            return cls([], z, z.copy(), z.copy(), z.copy(), [], [], [])
+            return cls([], z, z.copy(), z.copy(), z.copy(), z.copy(), [], [], [])
         rows = [
-            (v.t_start, v.duration, v.slice_id, v.job_id, v.fmp, v.local_utility)
+            (v.t_start, v.duration, v.slice_id, v.job_id, v.fmp,
+             v.local_utility, v.theta)
             for v in variants
         ]
-        ts, dur, sids, jids, fmps, h = zip(*rows)
+        ts, dur, sids, jids, fmps, h, th = zip(*rows)
         t_start = np.asarray(ts, np.float64)
         duration = np.asarray(dur, np.float64)
         return cls(
             list(variants), t_start, duration, t_start + duration,
-            np.asarray(h, np.float64), list(sids), list(jids), list(fmps),
+            np.asarray(h, np.float64), np.asarray(th, np.float64),
+            list(sids), list(jids), list(fmps),
         )
 
     def __len__(self) -> int:
@@ -244,7 +285,7 @@ class PoolView:
         return PoolView(
             [self.variants[i] for i in idx],
             self.t_start[idx], self.duration[idx], self.t_end[idx],
-            self.local_utility[idx],
+            self.local_utility[idx], self.thetas[idx],
             [self.slice_ids[i] for i in idx],
             [self.job_ids[i] for i in idx],
             [self.fmps[i] for i in idx],
@@ -265,6 +306,6 @@ def variants_to_arrays(variants: Sequence[Variant]) -> dict:
     }
 
 
-def overlaps(a: Variant, b: Variant, *, eps: float = 1e-12) -> bool:
+def overlaps(a: Variant, b: Variant, *, eps: float = OVERLAP_EPS) -> bool:
     """Temporal overlap predicate on the same slice (clearing constraint i)."""
     return a.t_start < b.t_end - eps and b.t_start < a.t_end - eps

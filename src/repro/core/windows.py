@@ -33,7 +33,7 @@ import bisect
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
 
-from .types import SliceSpec, Window
+from .types import DEAD_WINDOW_EPS, SliceSpec, Window
 
 __all__ = [
     "SliceTimeline",
@@ -154,7 +154,7 @@ class DeadWindowRegistry:
       preparation at that timestamp would see.
     """
 
-    def __init__(self, eps: float = 1e-6):
+    def __init__(self, eps: float = DEAD_WINDOW_EPS):
         self.eps = eps
         # slice_id -> [(t_min, expiry)]
         self._entries: Dict[str, List[Tuple[float, float]]] = {}

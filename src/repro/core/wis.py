@@ -27,6 +27,8 @@ from typing import List, Sequence, Tuple
 
 import numpy as np
 
+from .types import OVERLAP_EPS
+
 __all__ = ["wis_select", "wis_select_jax", "wis_brute_force", "total_weight"]
 
 
@@ -104,7 +106,8 @@ def wis_brute_force(
         for a in range(len(idx)):
             for b in range(a + 1, len(idx)):
                 i, j = idx[a], idx[b]
-                if starts[i] < ends[j] - 1e-12 and starts[j] < ends[i] - 1e-12:
+                if (starts[i] < ends[j] - OVERLAP_EPS
+                        and starts[j] < ends[i] - OVERLAP_EPS):
                     ok = False
                     break
             if not ok:
