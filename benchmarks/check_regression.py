@@ -24,6 +24,12 @@ Two classes of check:
       ``GreedyWIS`` (its dominance contract is exact, no tolerance) —
       and the deterministic ``recovered=`` score may not drop more than
       ``tol`` below baseline.
+    - ``adaptive_bidding_*``: ``adaptive_ok=True`` must hold — the
+      ``AdaptiveBidder`` strategy must strictly out-clear
+      ``GreedyChunking`` on the contention scenario (the negotiation
+      feedback loop's value contract, exact) — and the deterministic
+      ``advantage=`` score gap may not drop more than ``tol`` below
+      baseline.
 
 * **Absolute latency** (loose, default 5x via ``--us-tol``):
   ``us_per_call`` of gated rows against baseline.  Shared CI runners and
@@ -51,7 +57,7 @@ import re
 import sys
 
 GATED_PREFIXES = ("round_throughput_", "score_dispatch_", "pipeline_overlap_",
-                  "policy_clearing_")
+                  "policy_clearing_", "adaptive_bidding_")
 
 
 def _load(path: str) -> dict:
@@ -102,6 +108,18 @@ def check(fresh: dict, baseline: dict, tol: float, us_tol: float,
                 failures.append(
                     f"{name}: recovered score {rec:.4f} vs baseline "
                     f"{base_rec:.4f} (-{(1 - rec / base_rec) * 100:.0f}% > "
+                    f"{tol * 100:.0f}% tolerance)")
+
+        if name.startswith("adaptive_bidding_"):
+            if "adaptive_ok=True" not in row.get("derived", ""):
+                failures.append(
+                    f"{name}: AdaptiveBidder cleared no more than "
+                    f"GreedyChunking (adaptive_ok!=True): {row.get('derived')!r}")
+            base_adv, adv = _field(base_row, "advantage"), _field(row, "advantage")
+            if base_adv and adv is not None and adv < base_adv * (1.0 - tol):
+                failures.append(
+                    f"{name}: adaptive advantage {adv:.4f} vs baseline "
+                    f"{base_adv:.4f} (-{(1 - adv / base_adv) * 100:.0f}% > "
                     f"{tol * 100:.0f}% tolerance)")
 
         if name.startswith("pipeline_overlap_"):

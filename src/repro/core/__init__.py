@@ -9,6 +9,8 @@ Layer map (paper section → module):
   §4.3 temporal fairness        → fairness
   §4.4 WIS clearing             → wis, clearing
   clearing objective + presets  → policy (ClearingPolicy backends, Policy)
+  bid-side negotiation          → negotiation (typed round messages,
+                                  BiddingStrategy backends, RoundFeedback)
   §3/§4 interaction cycle       → scheduler
   §6(a) quantitative study      → simulator, baselines
 """
@@ -59,6 +61,18 @@ from .windows import (  # noqa: F401
     announce_windows,
 )
 from .atomizer import AtomizerConfig, ChunkPlan, chunk_candidates  # noqa: F401
+from .negotiation import (  # noqa: F401
+    AdaptiveBidder,
+    Award,
+    BidBundle,
+    BiddingStrategy,
+    ConservativeSafety,
+    GreedyChunking,
+    LossReport,
+    RoundFeedback,
+    WindowAnnouncement,
+    build_feedback,
+)
 from .jobs import AgentConfig, JobAgent  # noqa: F401
 from .clearing import assign_bids, clear_round, clear_window, settle_round  # noqa: F401
 from .policy import (  # noqa: F401

@@ -205,6 +205,12 @@ class MonolithicScheduler:
         self.commitments.append(Commitment(variant=v, commit_time=now, score=score))
         self.n_committed_total += 1
         self.committed_score_total += float(score)
+        # mirror JASDA's per-agent win accounting so cross-system win-rate
+        # and cleared-score comparisons read off the same agent fields
+        agent = self.agents.get(v.job_id)
+        if agent is not None:
+            agent.n_wins += 1
+            agent.score_won += float(score)
 
     def _free_at(self, sid: str, now: float) -> bool:
         tl = self.slices[sid]

@@ -85,6 +85,15 @@ class _JobCal:
     n_verified: int = 0
     errors: list = field(default_factory=list)
     rho: float = 1.0
+    # signed declaration bias: EWMA of mean(declared − observed) over the
+    # common features.  Positive = systematic over-declaration.  This is
+    # the gradient signal auction-style bid shading steers to zero
+    # (negotiation.AdaptiveBidder); |bias| ≤ ε̄ always (triangle inequality).
+    bias: float = 0.0
+
+    def mean_error(self, window: Optional[int] = None) -> float:
+        errs = self.errors if window is None else self.errors[-window:]
+        return float(np.mean(errs)) if errs else 0.0
 
 
 class Calibrator:
@@ -137,6 +146,20 @@ class Calibrator:
         st.errors.append(eps)
         st.n_verified += 1
 
+        # Signed declaration bias (EWMA, same half-life as HistAvg): the
+        # direction of the error, so strategies can shade declarations
+        # toward observations instead of merely knowing they are off.
+        common = [k for k in variant.declared_features if k in observed_features]
+        if common:
+            signed = float(
+                np.mean([
+                    float(variant.declared_features[k]) - float(observed_features[k])
+                    for k in common
+                ])
+            )
+            decay_b = 0.5 ** (1.0 / max(cfg.hist_half_life, 1e-9))
+            st.bias = decay_b * st.bias + (1 - decay_b) * signed
+
         # HistAvg update: EWMA of the *verified* (observed) utility.
         if observed_utility is None:
             # reconstruct from observed features with the declared weighting
@@ -154,14 +177,42 @@ class Calibrator:
         st.rho = reliability(expected, cfg.kappa)
         return eps
 
-    # -- reporting -----------------------------------------------------------
+    # -- reporting / checkpointing -------------------------------------------
     def snapshot(self) -> Dict[str, Dict[str, float]]:
+        """Full per-job calibration state, JSON-serializable.
+
+        Round-trippable through :meth:`restore`: the ``errors`` history is
+        included verbatim (it feeds the windowed E_v[ε] → ρ update), so a
+        restored calibrator continues exactly where the snapshot was taken
+        — simulator checkpoints preserve trust state across runs.
+        """
         return {
             j: {
                 "rho": st.rho,
                 "hist_avg": st.hist_avg,
                 "n_verified": st.n_verified,
-                "mean_error": float(np.mean(st.errors)) if st.errors else 0.0,
+                "mean_error": st.mean_error(),
+                "bias": st.bias,
+                "errors": list(st.errors),
             }
             for j, st in self._jobs.items()
         }
+
+    def restore(self, snapshot: Mapping[str, Mapping[str, float]]) -> "Calibrator":
+        """Rebuild per-job state from a :meth:`snapshot` (returns self).
+
+        Tolerates snapshots taken before the ``bias``/``errors`` fields
+        existed (missing keys restore to their neutral defaults; ρ then
+        evolves from the restored value as new verifications arrive).
+        """
+        self._jobs = {
+            j: _JobCal(
+                hist_avg=float(row["hist_avg"]),
+                n_verified=int(row.get("n_verified", 0)),
+                errors=list(row.get("errors", ())),
+                rho=float(row["rho"]),
+                bias=float(row.get("bias", 0.0)),
+            )
+            for j, row in snapshot.items()
+        }
+        return self

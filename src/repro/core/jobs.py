@@ -1,14 +1,26 @@
-"""Job agents (paper §3.2–§3.3): autonomous variant generation and bidding.
+"""Job agents (paper §3.2–§3.3): the stateful half of the bid side.
 
-Each JobAgent owns a JobSpec + mutable progress state and implements the
-job side of the interaction cycle.  In the round model the scheduler
-announces ALL open windows at once and the agent answers with one pooled
-bid list (:meth:`JobAgent.generate_variants_round`); per-window generation
-(:meth:`JobAgent.generate_variants`) remains the building block and the
-legacy single-window API.  An agent may bid the same remaining work against
-several windows in one round — cross-window exclusivity (a job never holds
-two overlapping intervals, and never wins more work than it has) is enforced
-at clearing time (clearing.clear_round), not at generation time.
+Each JobAgent owns a JobSpec + mutable progress state (work done,
+outstanding commitments, safety cache, bid/win statistics) and implements
+the job side of the interaction cycle by DELEGATING every decision —
+variant generation, chunk sizing, window targeting, self-scoring, feedback
+consumption — to a pluggable :class:`~repro.core.negotiation.base.
+BiddingStrategy` selected via ``AgentConfig.strategy`` (default:
+:class:`~repro.core.negotiation.greedy.GreedyChunking`, byte-identical to
+the historical hardcoded generation).
+
+The typed round protocol (``repro.core.negotiation.messages``):
+
+* :meth:`JobAgent.respond` consumes a ``WindowAnnouncement`` and returns a
+  ``BidBundle`` (bids grouped per announced window);
+* :meth:`JobAgent.observe_feedback` ingests the scheduler's
+  ``RoundFeedback`` after every clear and reports whether the strategy
+  adapted (the scheduler bumps its state epoch when it did, so the round
+  pipeline's speculative preparations stay provably serial-equivalent).
+
+``generate_variants_round`` / ``generate_variants_by_window`` /
+``generate_variants`` survive as thin delegates over the same single code
+path (the strategy), so every pre-negotiation caller keeps working.
 
 Eligibility (paper §4.1):
   (a) probabilistic safety  Pr(max RAM > c_k | FMP) ≤ θ   (safe-by-construction)
@@ -21,16 +33,17 @@ is what keeps them in check, and tests verify exactly that.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .atomizer import AtomizerConfig, chunk_candidates
+from .atomizer import AtomizerConfig
+from .negotiation import (BiddingStrategy, BidBundle, GreedyChunking,
+                          RoundFeedback, WindowAnnouncement)
 from .scoring import JobFeatures
-from .trp import PhaseFMP, is_safe
-from .types import OVERLAP_EPS, JobSpec, JobState, Variant, Window
+from .trp import is_safe
+from .types import OVERLAP_EPS, TIME_EPS, JobSpec, JobState, Variant, Window
 
 __all__ = ["JobAgent", "AgentConfig"]
 
@@ -47,10 +60,13 @@ class AgentConfig:
     misreport: float = 1.0
     # start-time alternatives within the window (beyond t_min itself)
     n_start_offsets: int = 1
+    # the bid-side decision backend (repro.core.negotiation.BiddingStrategy);
+    # None = GreedyChunking (the historical generation, byte-identical)
+    strategy: Optional[BiddingStrategy] = None
 
 
 class JobAgent:
-    """The decision-capable agent wrapping one job."""
+    """The decision-capable agent wrapping one job (state-holder half)."""
 
     def __init__(
         self,
@@ -61,18 +77,24 @@ class JobAgent:
         self.spec = spec
         self.cfg = cfg
         self.atomizer = atomizer
+        self.strategy: BiddingStrategy = (
+            cfg.strategy if cfg.strategy is not None else GreedyChunking()
+        )
+        self.strategy_state = self.strategy.init_state(self)
         self.state = JobState.WAITING
         self.work_done: float = 0.0
         self.n_bids = 0
         self.n_wins = 0
+        self.score_won: float = 0.0  # total cleared (committed) score
         # outstanding commitments: work already won but not yet executed, and
         # the time intervals it occupies (a job is a sequential subjob stream
         # — it must never hold two overlapping intervals, even across slices)
         self.outstanding_work: float = 0.0
         self.committed_intervals: list = []
-        # safety verdicts are a function of (capacity,) only for a fixed FMP —
-        # memoized so a round over many same-capacity windows checks once
-        self._safety_cache: Dict[float, bool] = {}
+        # safety verdicts are a function of (capacity, θ) only for a fixed
+        # FMP — memoized so a round over many same-capacity windows checks
+        # once (θ in the key: strategies may tighten the agent's own bound)
+        self._safety_cache: Dict[Tuple[float, float], bool] = {}
 
     # -- progress ------------------------------------------------------------
     @property
@@ -121,14 +143,31 @@ class JobAgent:
             return 0.0
         return float(n_chips)
 
-    def _is_safe_on(self, capacity: float) -> bool:
-        """Condition (a) memoized by capacity (the FMP is fixed per agent)."""
-        hit = self._safety_cache.get(capacity)
+    #: safety-verdict memo bound: strategies with a drifting θ (e.g.
+    #: ConservativeSafety, whose ρ changes with every verification) insert
+    #: one entry per distinct bound — evict oldest-first past this size so
+    #: a long-lived agent's cache cannot grow without limit
+    _SAFETY_CACHE_MAX = 256
+
+    def is_safe_on(self, capacity: float, theta: Optional[float] = None) -> bool:
+        """Condition (a) memoized by (capacity, θ) — the FMP is fixed.
+
+        ``theta=None`` checks the agent's own ``cfg.theta``; strategies
+        (e.g. ConservativeSafety) may pass a tightened bound.  Within one
+        round θ is fixed per strategy, so the memo still collapses a
+        many-window announcement to one FMP evaluation per capacity.
+        """
+        if theta is None:
+            theta = self.cfg.theta
+        key = (capacity, theta)
+        hit = self._safety_cache.get(key)
         if hit is None:
             hit = is_safe(
-                self.spec.fmp, capacity, self.cfg.theta, method=self.cfg.safety_method
+                self.spec.fmp, capacity, theta, method=self.cfg.safety_method
             )
-            self._safety_cache[capacity] = hit
+            while len(self._safety_cache) >= self._SAFETY_CACHE_MAX:
+                self._safety_cache.pop(next(iter(self._safety_cache)))
+            self._safety_cache[key] = hit
         return hit
 
     # -- speculative-bid support (core/pipeline.py) ----------------------------
@@ -136,17 +175,48 @@ class JobAgent:
         """The one counter speculative bid generation mutates: ``n_bids``.
 
         Variant ids are deterministic per (window, chain position) — see
-        :meth:`_make_variant` — so generation itself is replayable.  Nothing
-        else may be snapshotted here: the snapshot is taken BEFORE the
-        in-flight round settles, and settle legitimately bumps ``n_wins`` —
-        a wider rollback would erase it.
+        :meth:`make_variant` — so generation itself is replayable (the
+        strategy ``bid`` contract forbids mutating strategy state).
+        Nothing else may be snapshotted here: the snapshot is taken BEFORE
+        the in-flight round settles, and settle legitimately bumps
+        ``n_wins`` / the strategy state — a wider rollback would erase it.
         """
         return self.n_bids
 
     def stats_restore(self, snap: int) -> None:
         self.n_bids = snap
 
-    # -- the job side of one auction round (steps 2–3) -------------------------
+    # -- the job side of one auction round (typed protocol) --------------------
+    def respond(self, announcement: WindowAnnouncement) -> BidBundle:
+        """Steps 2–3: answer one announcement through the strategy.
+
+        Returns the agent's :class:`BidBundle` (bids grouped per announced
+        window, aligned with ``announcement.windows``).  A finished or
+        fully-committed job answers with an empty bundle without invoking
+        the strategy.
+        """
+        if self.finished or self.biddable_work <= TIME_EPS:
+            groups: Sequence[Sequence[Variant]] = [
+                () for _ in announcement.windows
+            ]
+        else:
+            groups = self.strategy.bid(self, self.strategy_state, announcement)
+        return BidBundle(
+            job_id=self.spec.job_id,
+            by_window=tuple(tuple(g) for g in groups),
+        )
+
+    def observe_feedback(self, feedback: RoundFeedback) -> bool:
+        """Step 5 closing leg: ingest the clearing's feedback broadcast.
+
+        Returns True when the strategy adapted in a way that could change
+        future bids (the scheduler invalidates speculative rounds then).
+        """
+        return bool(
+            self.strategy.observe(self, self.strategy_state, feedback)
+        )
+
+    # -- legacy generation API: thin delegates over respond() ------------------
     def generate_variants_round(
         self,
         windows: Sequence[Window],
@@ -180,63 +250,36 @@ class JobAgent:
         gaps), so dropping a group reproduces exactly the pool a fresh
         announcement over the surviving windows would have produced.
         """
-        if self.finished or self.biddable_work <= 1e-9:
-            return [[] for _ in windows]
-        out: List[List[Variant]] = []
-        for w in windows:
-            chips = n_chips.get(w.slice_id, 1) if n_chips else 1
-            out.append(self.generate_variants(w, now, chips))
-        return out
+        bundle = self.respond(
+            WindowAnnouncement(
+                now=now, windows=tuple(windows), chips=dict(n_chips or {})
+            )
+        )
+        return [list(g) for g in bundle.by_window]
 
-    # -- the job side of one JASDA iteration (steps 2–3, single window) --------
     def generate_variants(self, window: Window, now: float, n_chips: int = 1) -> List[Variant]:
-        if self.finished or self.biddable_work <= 1e-9:
-            return []
-        thr = self.throughput_on(window.capacity, n_chips)
-        if thr <= 0:
-            return []  # condition (b) fails → silent
-        # condition (a): probabilistic safety against this slice's capacity
-        if not self._is_safe_on(window.capacity):
-            return []
+        """Single-window bidding (the legacy A3 API): a one-window round."""
+        return self.generate_variants_by_window(
+            [window], now, {window.slice_id: n_chips}
+        )[0]
 
-        # Build a CHAIN of sequential chunks through the window (the paper's
-        # worked example: J_A fills w* with two tiling variants) plus smaller
-        # overlapping alternatives at each chain position.  Alternatives at
-        # one position mutually overlap, so the WIS clearing picks at most
-        # one per position; chain positions carve work from disjoint
-        # portions, so any selected combination commits ≤ biddable work.
-        variants: List[Variant] = []
-        remaining = self.biddable_work
-        t_cursor = window.t_min
-        max_v = self.atomizer.max_variants_per_window
-        while remaining > 1e-9 and t_cursor < window.t_end - 1e-9 and len(variants) < max_v:
-            span = window.t_end - t_cursor
-            plans = chunk_candidates(remaining, thr, span, self.atomizer)
-            if not plans:
-                break
-            for plan in plans:
-                if len(variants) >= max_v:
-                    break
-                if t_cursor + plan.duration > window.t_end + 1e-9:
-                    continue
-                if self._overlaps_own(t_cursor, plan.duration):
-                    continue  # job already committed elsewhere in this span
-                variants.append(
-                    self._make_variant(window, t_cursor, plan, now, len(variants))
-                )
-            largest = plans[0]
-            remaining -= largest.work
-            t_cursor += largest.duration
-        if variants:
-            self.n_bids += 1
-        return variants
-
-    def _make_variant(
-        self, window: Window, t_start: float, plan, now: float, seq: int
+    # -- variant assembly (strategies drive this; truth stays here) ------------
+    def make_variant(
+        self,
+        window: Window,
+        t_start: float,
+        plan,
+        now: float,
+        seq: int,
+        *,
+        shade: float = 1.0,
+        theta: Optional[float] = None,
     ) -> Variant:
+        """Build one bid: truthful φs, then the declaration the strategy asks
+        for (misreport × shade, clipped) and the θ it bids under."""
         feats = self._features(plan.work, plan.duration, t_start, now)
         declared = {
-            k: float(np.clip(v * self.cfg.misreport, 0.0, 1.0))
+            k: float(np.clip(v * self.cfg.misreport * shade, 0.0, 1.0))
             for k, v in feats.items()
         }
         h = sum(self.cfg.alphas.get(k, 0.0) * v for k, v in declared.items())
@@ -260,10 +303,15 @@ class JobAgent:
                 "true_features": feats,  # ground truth (≠ declared if misreporting)
             },
             variant_id=vid,
-            # the agent's OWN risk bound rides along so the in-dispatch
-            # safety recheck can verify per-agent θ (PackedRound.thetas)
-            theta=self.cfg.theta,
+            # the risk bound this bid was generated under rides along so the
+            # in-dispatch safety recheck can verify per-agent θ
+            # (PackedRound.thetas); strategies may tighten the agent's own θ
+            theta=self.cfg.theta if theta is None else theta,
         )
+
+    # kept as an alias: pre-negotiation code and the frozen reference tests
+    # call the historical underscore name
+    _make_variant = make_variant
 
     # -- truthful feature values (what an honest job declares) ----------------
     def _features(self, work: float, duration: float, t_start: float, now: float) -> Dict[str, float]:

@@ -1,0 +1,240 @@
+"""Typed messages of the scheduler↔agent negotiation protocol.
+
+The paper's interaction cycle is a *bidirectional* negotiation: the
+scheduler announces execution windows, jobs answer with scored subjob
+variants, the clearing awards a subset — and feedback about the clearing
+flows BACK to the bidders so they can adapt.  Before this module the cycle
+was encoded as loose positional arguments (``windows, now, n_chips``) and
+the feedback half did not exist at all.  Each leg is now a frozen value
+object:
+
+    WindowAnnouncement ──▶ BidBundle ──▶ (score + clear) ──▶ RoundFeedback
+         (step 1)          (steps 2–3)       (step 4)        (step 5 + §4.2.1)
+
+* :class:`WindowAnnouncement` — one round's full window set plus per-slice
+  chip counts; what ``JobAgent.respond`` consumes.
+* :class:`BidBundle` — one agent's answer, grouped per announced window
+  (the grouping is what lets the round pipeline drop an invalidated
+  window's bids without regenerating the rest).
+* :class:`Award` / :class:`LossReport` — per-bid outcomes inside the
+  feedback; losses carry a coarse *reason* so strategies can react
+  differently to being outscored vs. colliding with their own wins.
+* :class:`RoundFeedback` — the broadcast published by
+  ``JasdaScheduler._settle_round`` after every clear: per-window
+  winning-score cutoffs, per-job awards/losses, and the §4.2.1 calibration
+  state (reliability ρ, mean error ε̄, signed declaration bias) each agent
+  needs for online bid shading.
+
+Messages are immutable and value-comparable; :func:`build_feedback` is the
+single constructor the scheduler (and baselines/tests) use, so the
+feedback contents stay consistent across entry points.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Sequence, Tuple
+
+from ..types import RoundResult, Variant, Window, overlaps
+
+__all__ = [
+    "WindowAnnouncement",
+    "BidBundle",
+    "Award",
+    "LossReport",
+    "RoundFeedback",
+    "build_feedback",
+]
+
+
+@dataclass(frozen=True)
+class WindowAnnouncement:
+    """Step 1: the full window set of one auction round.
+
+    ``chips`` maps slice_id → chip count (throughput model input); windows
+    keep the announcement order (the WindowPolicy ordering).
+    """
+
+    now: float
+    windows: Tuple[Window, ...]
+    chips: Mapping[str, int] = field(default_factory=dict)
+
+    def chips_for(self, slice_id: str) -> int:
+        return int(self.chips.get(slice_id, 1)) if self.chips else 1
+
+
+@dataclass(frozen=True)
+class BidBundle:
+    """Steps 2–3: one agent's bids, grouped per announced window.
+
+    ``by_window[k]`` holds the bids targeting ``announcement.windows[k]``
+    (possibly empty — condition (a)/(b) failures keep the job silent on
+    that window).  An agent may bid the same remaining work on several
+    windows; cross-window exclusivity is enforced at clearing time.
+    """
+
+    job_id: str
+    by_window: Tuple[Tuple[Variant, ...], ...]
+
+    @property
+    def variants(self) -> Tuple[Variant, ...]:
+        """The flattened pool contribution, in window order."""
+        return tuple(v for group in self.by_window for v in group)
+
+    def __len__(self) -> int:
+        return sum(len(g) for g in self.by_window)
+
+
+@dataclass(frozen=True)
+class Award:
+    """One winning bid: the cleared variant, its window and commit score."""
+
+    variant_id: str
+    window: Window
+    score: float
+
+
+#: LossReport.reason values
+LOSS_OUTSCORED = "outscored"  # window cleared, rivals' bids won instead
+LOSS_WINDOW_EMPTY = "window_empty"  # the whole window cleared empty (→ dead)
+# overlaps one of the job's OWN wins: a chain-position alternative yielding
+# to the sibling the WIS picked, or a cross-slice duplicate revoked by
+# conflict resolution.  NOT a market defeat — adaptive strategies must not
+# react to it the way they react to being outscored.
+LOSS_SELF_CONFLICT = "self_conflict"
+
+
+@dataclass(frozen=True)
+class LossReport:
+    """One losing bid with a coarse reason and the window's score cutoff.
+
+    ``cutoff`` is the lowest winning score in the bid's window (0.0 when
+    the window cleared empty) — the auction-style price signal an adaptive
+    bidder shades against.
+    """
+
+    variant_id: str
+    window: Window
+    reason: str
+    cutoff: float = 0.0
+
+
+@dataclass(frozen=True)
+class RoundFeedback:
+    """Step 5 + §4.2.1: what the clearing tells the bidders afterwards.
+
+    One broadcast per settled round; agents read their own rows (keyed by
+    job_id).  ``cutoffs`` maps ``Window.key`` → minimum winning score
+    (0.0 for windows that cleared empty).  The calibration maps carry the
+    scheduler's CURRENT trust state for every agent in the round —
+    reliability ρ_J (Eq. 8), the windowed mean error ε̄, and the signed
+    declaration bias (declared − observed EWMA) that bid-shading
+    strategies steer to zero.
+    """
+
+    t: float
+    windows: Tuple[Window, ...]
+    cutoffs: Mapping[Tuple[str, float], float]
+    awards: Mapping[str, Tuple[Award, ...]]
+    losses: Mapping[str, Tuple[LossReport, ...]]
+    reliability: Mapping[str, float]
+    calibration_error: Mapping[str, float]
+    calibration_bias: Mapping[str, float]
+    n_selected: int = 0
+    n_conflicts: int = 0
+
+    def cutoff_for(self, window: Window) -> float:
+        return float(self.cutoffs.get(window.key, 0.0))
+
+
+def build_feedback(
+    now: float,
+    windows: Sequence[Window],
+    agents: Sequence,
+    bids: Sequence[Sequence[Sequence[Variant]]],
+    rr: RoundResult,
+    calibrator=None,
+) -> RoundFeedback:
+    """Assemble the :class:`RoundFeedback` for one settled round.
+
+    ``bids[a][k]`` are agent a's bids on window k (the RoundPrep layout).
+    Variant ids are unique within a round (jobs._make_variant), so the
+    winner sets key on them.  ``calibrator`` is the scheduler's
+    :class:`~repro.core.calibration.Calibrator` (None in stateless tests:
+    the calibration maps come back empty-trust ρ=1).
+    """
+    windows = list(windows)
+    # per-window winner ids + commit scores, and the cutoff price signal
+    won_score: Dict[str, float] = {}
+    winners_per_window: List[set] = []
+    cutoffs: Dict[Tuple[str, float], float] = {}
+    for k, result in enumerate(rr.results):
+        ids = set()
+        for v, s in zip(result.selected, result.scores):
+            ids.add(v.variant_id)
+            won_score[v.variant_id] = float(s)
+        winners_per_window.append(ids)
+        cutoffs[windows[k].key] = float(min(result.scores)) if result.scores else 0.0
+
+    awards: Dict[str, Tuple[Award, ...]] = {}
+    losses: Dict[str, Tuple[LossReport, ...]] = {}
+    reliability: Dict[str, float] = {}
+    calibration_error: Dict[str, float] = {}
+    calibration_bias: Dict[str, float] = {}
+    for agent, per_window in zip(agents, bids):
+        job_id = agent.spec.job_id
+        my_awards: List[Award] = []
+        my_wins: List[Variant] = []
+        lost: List[Tuple[Variant, Window, int]] = []
+        for k, group in enumerate(per_window):
+            if k >= len(windows):
+                break
+            for v in group:
+                if v.variant_id in winners_per_window[k]:
+                    my_awards.append(
+                        Award(v.variant_id, windows[k], won_score[v.variant_id])
+                    )
+                    my_wins.append(v)
+                else:
+                    lost.append((v, windows[k], k))
+        my_losses: List[LossReport] = []
+        for v, w, k in lost:
+            if not winners_per_window[k]:
+                reason = LOSS_WINDOW_EMPTY
+            elif any(overlaps(v, win) for win in my_wins):
+                # same epsilon-tolerant predicate the clearing itself used,
+                # so the classification matches the conflict resolution
+                reason = LOSS_SELF_CONFLICT
+            else:
+                reason = LOSS_OUTSCORED
+            my_losses.append(
+                LossReport(v.variant_id, w, reason, cutoffs.get(w.key, 0.0))
+            )
+        if my_awards:
+            awards[job_id] = tuple(my_awards)
+        if my_losses:
+            losses[job_id] = tuple(my_losses)
+        if calibrator is not None:
+            st = calibrator.state(job_id)
+            reliability[job_id] = float(st.rho)
+            # the same windowed E_v[ε] that drives ρ (Eq. 7/8), not the
+            # full-history mean — the two diverge for long-lived jobs
+            calibration_error[job_id] = float(
+                st.mean_error(calibrator.config.error_window)
+            )
+            calibration_bias[job_id] = float(st.bias)
+        else:
+            reliability[job_id] = 1.0
+            calibration_error[job_id] = 0.0
+            calibration_bias[job_id] = 0.0
+    return RoundFeedback(
+        t=now,
+        windows=tuple(windows),
+        cutoffs=cutoffs,
+        awards=awards,
+        losses=losses,
+        reliability=reliability,
+        calibration_error=calibration_error,
+        calibration_bias=calibration_bias,
+        n_selected=len(rr.selected),
+        n_conflicts=rr.n_conflicts,
+    )

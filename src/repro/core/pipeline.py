@@ -23,7 +23,15 @@ Speculation is validated — never trusted — before use:
   so the surviving preparation is FILTERED: the dead windows' bid groups
   are dropped and the pool re-packed/re-dispatched.  Bid generation is
   per-window independent (jobs.generate_variants_by_window), so the
-  filtered pool equals what a fresh announcement would produce.
+  filtered pool equals what a fresh announcement would produce;
+* the settle's RoundFeedback broadcast (the clearing→agent negotiation
+  channel) is published AFTER speculation was taken, so a bidding
+  strategy that adapts from it (observe_feedback → True) bumps the epoch
+  exactly like a commitment: the pre-feedback speculative bids are
+  discarded and regenerated serially against the adapted state.
+  Stateless strategies (GreedyChunking) report no adaptation and keep
+  speculation hitting — feedback consistency costs nothing unless a
+  strategy actually uses the channel.
 
 The result is provably identical to serial rounds (equivalence-tested
 byte-for-byte), with the host work of round k+1 hidden behind round k's

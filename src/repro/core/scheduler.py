@@ -15,10 +15,16 @@ One :meth:`JasdaScheduler.run_round`
 drives the paper's five-step cycle over ALL open capacity at once:
 
   * announce every eligible window across every slice   (windows.py, step 1)
-  * pooled bid collection from registered JobAgents     (jobs.py, steps 2–3)
+  * pooled bid collection from registered JobAgents
+    via the typed negotiation protocol
+    (WindowAnnouncement → BidBundle)                    (jobs.py, steps 2–3)
   * ONE batched scoring dispatch + per-window WIS with
     cross-window conflict resolution                    (clearing.py, step 4)
-  * commitment + bookkeeping + fairness/trust           (step 5)
+  * commitment + bookkeeping + fairness/trust, then a
+    RoundFeedback broadcast back to every bidder
+    (negotiation/messages.py: cutoffs, awards, loss
+    reasons, calibration state) — the clearing→agent
+    feedback channel adaptive strategies learn from     (step 5)
 
 The round is split into a **prepare** half (announce + bid collection +
 packing + async scoring dispatch — :meth:`_prepare_round`) and a **settle**
@@ -59,6 +65,7 @@ from .calibration import CalibrationConfig, Calibrator
 from .clearing import assign_bids
 from .fairness import AgePolicy, AgeTracker
 from .jobs import JobAgent
+from .negotiation import RoundFeedback, WindowAnnouncement, build_feedback
 from .policy import ClearingPolicy, GreedyWIS, Policy
 from .scoring import ScoringPolicy, score_round_async
 from .types import (DEAD_WINDOW_EPS, ClearingResult, Commitment, JobSpec,
@@ -230,7 +237,8 @@ class RoundPrep:
     epoch: int
     windows: List[Window]
     agents: List[JobAgent] = field(default_factory=list)
-    bids: List[List[List[Variant]]] = field(default_factory=list)
+    # per-agent bid groups (read-only; group containers may be tuples)
+    bids: List[Sequence[Sequence[Variant]]] = field(default_factory=list)
     pool: List[Variant] = field(default_factory=list)
     fit: List[Variant] = field(default_factory=list)
     win_idx: object = None  # (F,) window index per fitting bid
@@ -293,6 +301,8 @@ class JasdaScheduler:
         # keeps its variant alive for exactly the entry's lifetime
         self._commit_index: Dict[int, Tuple[Commitment, CommitRecord]] = {}
         self.log: List[IterationLog] = []
+        # the most recent RoundFeedback broadcast (negotiation channel)
+        self.last_feedback: Optional[RoundFeedback] = None
         self.retired_intervals: Dict[str, List[Tuple[float, float]]] = {}
         self._dead_windows = DeadWindowRegistry(eps=self.config.dead_window_eps)
         # state version: bumped by EVERY mutation that could change what a
@@ -408,14 +418,21 @@ class JasdaScheduler:
     def _build_prep(
         self, now: float, windows: List[Window], *, speculative: bool = False
     ) -> RoundPrep:
-        # Steps 2–3: every job answers the full window set (or stays silent).
+        # Steps 2–3: every job answers the full window set (or stays silent)
+        # through the typed negotiation protocol (one WindowAnnouncement in,
+        # one BidBundle per agent out).
         chips = {sid: tl.spec.n_chips for sid, tl in self.slices.items()}
         agents = list(self.agents.values())
         snap = (
             {a.spec.job_id: a.stats_snapshot() for a in agents}
             if speculative else None
         )
-        bids = [a.generate_variants_by_window(windows, now, chips) for a in agents]
+        announcement = WindowAnnouncement(
+            now=now, windows=tuple(windows), chips=chips
+        )
+        # bundle groups are consumed read-only (pooling, pipeline refilter
+        # rebuilds outer lists) — keep the frozen tuples, no unwrap copy
+        bids = [list(a.respond(announcement).by_window) for a in agents]
         prep = RoundPrep(
             now=now, epoch=self._epoch, windows=list(windows),
             agents=agents, bids=bids, stats_snap=snap,
@@ -485,6 +502,7 @@ class JasdaScheduler:
                     self.ages.mark_selected(v.job_id, now)
                     agent = self.agents[v.job_id]
                     agent.n_wins += 1
+                    agent.score_won += float(s)
                     agent.mark_committed(v)
             else:
                 self._dead_windows.add(
@@ -492,9 +510,27 @@ class JasdaScheduler:
                     result.window.t_min,
                     now + self.config.dead_window_cooldown,
                 )
-        if rr.selected:
-            # timelines, agent budgets and ages changed: invalidate any
-            # speculative preparation built against the pre-settle state
+        # The clearing→agent feedback channel (the negotiation loop's
+        # closing leg): publish one RoundFeedback broadcast — per-window
+        # winning-score cutoffs, per-job awards/losses with reasons, and the
+        # §4.2.1 calibration state — to every agent of the round.  A
+        # strategy that adapts (observe_feedback → True) could bid
+        # differently next round, so it invalidates speculative
+        # preparations exactly like a state mutation: epoch-validated, the
+        # same protocol that guards dead windows (core/pipeline.py).
+        feedback = build_feedback(
+            now, prep.windows, prep.agents, prep.bids, rr, self.calibrator
+        )
+        adapted = False
+        for agent in prep.agents:
+            if agent.observe_feedback(feedback):
+                adapted = True
+        self.last_feedback = feedback
+
+        if rr.selected or adapted:
+            # timelines, agent budgets, ages or strategy state changed:
+            # invalidate any speculative preparation built against the
+            # pre-settle state
             self._epoch += 1
 
         rr.n_bidders = prep.bidders

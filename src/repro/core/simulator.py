@@ -15,6 +15,12 @@ Fault model (beyond-paper, per assignment):
     ex-post ε grows, and calibration de-prioritizes jobs mapped there —
     mitigation falls out of the paper's own trust machinery.
 
+Scenario axes (beyond-paper): fault model, stragglers, misreporting — and
+mixed-strategy POPULATIONS (``make_workload(strategies=[...])``): jobs can
+run different ``negotiation.BiddingStrategy`` backends side by side, and
+``SimResult.strategy_stats`` reports per-strategy bids/wins/cleared score
+so strategy matchups (AdaptiveBidder vs GreedyChunking) read off one run.
+
 Metrics: utilization, mean/95p JCT, makespan, Jain fairness on slowdown,
 bid/win counts, capacity-violation rate (validates θ).
 """
@@ -69,6 +75,12 @@ class SimResult:
     total_score: float
     jct_per_job: Dict[str, float] = field(default_factory=dict)
     reliability: Dict[str, float] = field(default_factory=dict)
+    # full Calibrator.snapshot() — round-trippable via Calibrator.restore(),
+    # so a follow-up run can resume the trust state this run ended with
+    calibration: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    # per-BiddingStrategy aggregates (mixed-strategy populations): strategy
+    # name -> {n_jobs, n_finished, n_bids, n_wins, score_won}
+    strategy_stats: Dict[str, Dict[str, float]] = field(default_factory=dict)
     iterations: int = 0
     # names of the policy / clearing backend that produced this run (JASDA
     # schedulers report Policy.name + ClearingPolicy.name; baselines their
@@ -271,6 +283,23 @@ def simulate(
     # JASDA schedulers report the Policy + backend that actually cleared
     sched_name = getattr(scheduler, "name", "")
     policy = None if sched_name else getattr(scheduler, "policy", None)
+    # per-strategy aggregates: the mixed-strategy scenario axis.  Keyed on
+    # BiddingStrategy.name; one row per strategy present in the population.
+    strategy_stats: Dict[str, Dict[str, float]] = {}
+    for a in agents:
+        name = getattr(getattr(a, "strategy", None), "name", "")
+        if not name:
+            continue
+        row = strategy_stats.setdefault(
+            name,
+            {"n_jobs": 0, "n_finished": 0, "n_bids": 0, "n_wins": 0,
+             "score_won": 0.0},
+        )
+        row["n_jobs"] += 1
+        row["n_finished"] += int(a.spec.job_id in jct)
+        row["n_bids"] += a.n_bids
+        row["n_wins"] += a.n_wins
+        row["score_won"] += float(getattr(a, "score_won", 0.0))
     return SimResult(
         policy=sched_name or getattr(policy, "name", ""),
         clearing=getattr(getattr(policy, "clearing", None), "name", ""),
@@ -294,6 +323,8 @@ def simulate(
                                   sum(c.score for c in scheduler.commitments))),
         jct_per_job=jct,
         reliability={j: s["rho"] for j, s in cal.items()},
+        calibration=cal,
+        strategy_stats=strategy_stats,
         iterations=iterations,
     )
 
@@ -313,8 +344,16 @@ def make_workload(
     qos_fraction: float = 0.3,
     misreport_fraction: float = 0.0,
     misreport_factor: float = 1.5,
+    strategies: Optional[Sequence] = None,
 ) -> List[JobAgent]:
-    """Poisson arrivals, log-uniform work, warmup/steady/burst FMPs."""
+    """Poisson arrivals, log-uniform work, warmup/steady/burst FMPs.
+
+    ``strategies`` opens the mixed-strategy scenario axis: a sequence of
+    ``repro.core.negotiation.BiddingStrategy`` instances assigned round-
+    robin across the jobs (job i gets ``strategies[i % len(strategies)]``),
+    so populations like half-greedy/half-adaptive stay deterministic per
+    seed.  None keeps every job on the default GreedyChunking.
+    """
     from .jobs import AgentConfig
     from .trp import fmp_standard
 
@@ -338,5 +377,6 @@ def make_workload(
             qos_deadline=deadline,
         )
         mis = misreport_factor if rng.uniform() < misreport_fraction else 1.0
-        agents.append(JobAgent(spec, AgentConfig(misreport=mis)))
+        strategy = strategies[i % len(strategies)] if strategies else None
+        agents.append(JobAgent(spec, AgentConfig(misreport=mis, strategy=strategy)))
     return agents

@@ -91,6 +91,16 @@ class Window:
     def t_end(self) -> float:
         return self.t_min + self.duration
 
+    @property
+    def key(self) -> Tuple[str, float]:
+        """Stable within-round identity: (slice, start).
+
+        Windows announced in one round are disjoint gaps per slice, so the
+        pair identifies a window uniquely; round-feedback cutoff maps
+        (negotiation.messages.RoundFeedback) key on it.
+        """
+        return (self.slice_id, self.t_min)
+
     def contains(self, t_start: float, dur: float, *, eps: float = TIME_EPS) -> bool:
         return (t_start >= self.t_min - eps) and (t_start + dur <= self.t_end + eps)
 
