@@ -23,7 +23,16 @@ Two classes of check:
       ``GlobalAssignment`` backend may never clear LESS total score than
       ``GreedyWIS`` (its dominance contract is exact, no tolerance) —
       and the deterministic ``recovered=`` score may not drop more than
-      ``tol`` below baseline.
+      ``tol`` below baseline.  ``overhead_ok=True`` must hold (the replay
+      overhead vs greedy stays below the pre-PR-5 9.34x serial-replay
+      baseline) and the measured ``overhead=`` ratio may not grow more
+      than ``tol`` above the committed baseline.
+    - ``settle_throughput_*``: ``identical_selections=True`` must hold
+      (the batched device settle is a pure mechanism change), the
+      ``speedup=``x over the per-window host WIS loop may not drop more
+      than ``tol`` below baseline, and ``settle_throughput_retraces``
+      must report ``retraces=0`` (exact — the zero-recompile contract of
+      the batched settle dispatch).
     - ``adaptive_bidding_*``: ``adaptive_ok=True`` must hold — the
       ``AdaptiveBidder`` strategy must strictly out-clear
       ``GreedyChunking`` on the contention scenario (the negotiation
@@ -57,7 +66,7 @@ import re
 import sys
 
 GATED_PREFIXES = ("round_throughput_", "score_dispatch_", "pipeline_overlap_",
-                  "policy_clearing_", "adaptive_bidding_")
+                  "policy_clearing_", "adaptive_bidding_", "settle_throughput_")
 
 
 def _load(path: str) -> dict:
@@ -83,11 +92,21 @@ def check(fresh: dict, baseline: dict, tol: float, us_tol: float,
             failures.append(f"{name}: gated row missing from fresh results")
             continue
 
-        if name == "score_dispatch_retraces":
+        if name in ("score_dispatch_retraces", "settle_throughput_retraces"):
             if "retraces=0" not in row.get("derived", ""):
                 failures.append(
                     f"{name}: expected retraces=0, got {row.get('derived')!r}")
             continue
+
+        if name.startswith("settle_throughput_"):
+            if "identical_selections=True" not in row.get("derived", ""):
+                failures.append(f"{name}: selections no longer identical")
+            base_sp, sp = _field(base_row, "speedup"), _field(row, "speedup")
+            if base_sp and sp and sp < base_sp * (1.0 - tol):
+                failures.append(
+                    f"{name}: batched-settle speedup {sp:.2f}x vs baseline "
+                    f"{base_sp:.2f}x (-{(1 - sp / base_sp) * 100:.0f}% > "
+                    f"{tol * 100:.0f}% tolerance)")
 
         if name.startswith("round_throughput_"):
             if "identical_selections=True" not in row.get("derived", ""):
@@ -109,6 +128,20 @@ def check(fresh: dict, baseline: dict, tol: float, us_tol: float,
                     f"{name}: recovered score {rec:.4f} vs baseline "
                     f"{base_rec:.4f} (-{(1 - rec / base_rec) * 100:.0f}% > "
                     f"{tol * 100:.0f}% tolerance)")
+            if ("overhead_ok=" in base_row.get("derived", "")
+                    and "overhead_ok=True" not in row.get("derived", "")):
+                failures.append(
+                    f"{name}: GlobalAssignment replay overhead regressed "
+                    f"above the 9.34x serial baseline (overhead_ok!=True): "
+                    f"{row.get('derived')!r}")
+            for key, label in (("overhead", "serial replay overhead"),
+                               ("overhead_batched", "batched replay overhead")):
+                base_ov, ov = _field(base_row, key), _field(row, key)
+                if base_ov and ov and ov > base_ov * (1.0 + tol):
+                    failures.append(
+                        f"{name}: {label} {ov:.2f}x vs baseline "
+                        f"{base_ov:.2f}x (+{(ov / base_ov - 1) * 100:.0f}% > "
+                        f"{tol * 100:.0f}% tolerance)")
 
         if name.startswith("adaptive_bidding_"):
             if "adaptive_ok=True" not in row.get("derived", ""):

@@ -13,6 +13,12 @@ quantitative study.  Prints ``name,us_per_call,derived`` CSV rows.
                          (bids cleared/sec vs pool size — the PR 1 tentpole)
   policy_clearing        GreedyWIS vs GlobalAssignment backends on a
                          conflict-heavy pool: recovered utility + wall-clock
+                         + replay-overhead gate (shared first pass + batched
+                         lockstep replays vs the 9.34x PR-4 baseline)
+  settle_throughput      device-resident settle: per-window host WIS loop vs
+                         the batched multi-window dispatch at W x M grids
+                         (identical selections + zero retraces — the PR 5
+                         tentpole)
   adaptive_bidding       AdaptiveBidder vs GreedyChunking on a contended
                          cluster: per-strategy cleared score + win-rate over
                          the feedback loop (the PR 4 tentpole)
@@ -347,6 +353,12 @@ def bench_round_throughput():
 # policy-driven clearing: greedy vs global assignment (the PR 3 tentpole)
 # ---------------------------------------------------------------------------
 
+# serial-replay GlobalAssignment overhead measured before the PR-5 replay
+# fan-out (policy_clearing_M256, PR-4 baseline_quick.json) — the overhead_ok
+# gate requires staying measurably below it
+OVERHEAD_BASELINE = 9.34
+
+
 def bench_policy_clearing():
     """Recovered utility + wall-clock: GreedyWIS vs GlobalAssignment.
 
@@ -411,7 +423,15 @@ def bench_policy_clearing():
             return clear_round(windows, pool, policy, ages=ages,
                                clearing=ga_backend)
 
+        def global_assign_batched():
+            # the PR-5 replay fan-out: candidate-config replays share one
+            # packed buffer set + first pass and run in lockstep through
+            # the batched selector (one dispatch per config generation)
+            return clear_round(windows, pool, policy, ages=ages,
+                               clearing=ga_backend, wis_impl="numpy")
+
         g, a = greedy(), global_assign()
+        ab = global_assign_batched()
         recovered = a.total_score - g.total_score
         ok = recovered >= -1e-9
         # the backend's dominance contract: fail CI smoke loudly if the
@@ -419,10 +439,14 @@ def bench_policy_clearing():
         assert ok, (
             f"GlobalAssignment lost score at M={m}: "
             f"{a.total_score:.6f} < {g.total_score:.6f}")
+        sel_a = [tuple(v.variant_id for v in r.selected) for r in a.results]
+        sel_b = [tuple(v.variant_id for v in r.selected) for r in ab.results]
+        assert sel_a == sel_b, (
+            f"batched-selector GlobalAssignment diverged at M={m}")
 
         # ABBA-paired minima (see round_throughput): sandbox jitter only
         # inflates samples, so per-variant minima compare capabilities
-        us_g_r, us_a_r = [], []
+        us_g_r, us_a_r, us_b_r = [], [], []
         for i in range(reps):
             first, second = (greedy, global_assign) if i % 2 == 0 else \
                 (global_assign, greedy)
@@ -431,12 +455,23 @@ def bench_policy_clearing():
             gg, aa = (x, y) if i % 2 == 0 else (y, x)
             us_g_r.append(gg)
             us_a_r.append(aa)
-        us_g, us_a = min(us_g_r), min(us_a_r)
+            us_b_r.append(_time(global_assign_batched, n=1, warmup=0))
+        us_g, us_a, us_b = min(us_g_r), min(us_a_r), min(us_b_r)
+        overhead = us_a / max(us_g, 1e-9)
+        overhead_b = us_b / max(us_g, 1e-9)
+        # PR-5 gate: the BATCHED replay path must stay measurably below the
+        # serial-replay baseline (9.34x, PR-4 era) on the SAME scenario —
+        # the serial 'overhead=' field is separately tolerance-gated by
+        # check_regression, so gating the batched field here means neither
+        # path can regress unnoticed
+        overhead_ok = overhead_b < OVERHEAD_BASELINE
         emit(f"policy_clearing_M{m}", us_a,
-             f"greedy_us={us_g:.0f} overhead={us_a / max(us_g, 1e-9):.2f}x "
+             f"greedy_us={us_g:.0f} overhead={overhead:.2f}x "
+             f"batched_us={us_b:.0f} overhead_batched={overhead_b:.2f}x "
              f"greedy_total={g.total_score:.4f} "
              f"global_total={a.total_score:.4f} recovered={recovered:.4f} "
-             f"conflicts={g.n_conflicts} recovered_ok={ok}")
+             f"conflicts={g.n_conflicts} recovered_ok={ok} "
+             f"overhead_ok={overhead_ok}")
 
 
 # ---------------------------------------------------------------------------
@@ -500,6 +535,144 @@ def bench_adaptive_bidding():
          f"rounds={res.iterations} "
          f"finished={adaptive['n_finished'] + greedy['n_finished']}/10 "
          f"adaptive_ok={ok}")
+
+
+# ---------------------------------------------------------------------------
+# device-resident settle: batched multi-window WIS vs the per-window host loop
+# ---------------------------------------------------------------------------
+
+def bench_settle_throughput():
+    """Batched multi-window settle vs the per-window host WIS loop.
+
+    Builds W×M grids (W disjoint windows, M pooled scored bids) and clears
+    them through ``settle_round`` with (a) the historical per-window
+    ``wis_select`` host loop and (b) the batched ``RoundSelector`` backends
+    ("numpy" host float64 and the "ref" device dispatch).  Selections are
+    asserted identical across all backends — the settle move is a pure
+    mechanism change — and the batched sweep (pack + one dispatch for all
+    windows) is timed against the host loop.  A second pass over ≥8 rounds
+    of drifting (W, M, scores) asserts the device dispatch NEVER retraces
+    after its per-bucket warmup (the zero-recompile contract of
+    kernels/wis_dp, mirroring score_dispatch).
+    """
+    import jax
+    from repro.core import ScoringPolicy
+    from repro.core.clearing import assign_bids, settle_round
+    from repro.core.trp import fmp_standard
+    from repro.core.types import Variant, Window
+    from repro.core.wis import make_round_selector, wis_select
+    from repro.core.policy.base import _pool_members
+    from repro.kernels.wis_dp import ops as wis_ops
+
+    GB = 1 << 30
+    rng = np.random.default_rng(17)
+    device_impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+
+    def make(m, n_windows):
+        windows = [
+            Window(slice_id=f"s{k}", capacity=(6 + 2 * (k % 8)) * GB,
+                   t_min=200.0 * k, duration=150.0)
+            for k in range(n_windows)
+        ]
+        fmp = fmp_standard(1 * GB, 2 * GB, 0.2 * GB)
+        pool = []
+        for i in range(m):
+            w = windows[rng.integers(0, n_windows)]
+            t0 = w.t_min + rng.uniform(0, w.duration * 0.7)
+            dur = rng.uniform(2.0, (w.t_min + w.duration - t0))
+            pool.append(Variant(
+                job_id=f"J{i % 64}", slice_id=w.slice_id, t_start=t0,
+                duration=dur, fmp=fmp, local_utility=0.5,
+                declared_features={}, payload={"work": dur},
+                variant_id=f"J{i % 64}/v{i}"))
+        fit, win_idx, view = assign_bids(windows, pool)
+        # float32-exact 12-bit score grid: every partial DP sum over ≤4096
+        # lanes stays exactly representable in float32, so the float32
+        # device DP and the float64 host DP provably make identical
+        # decisions (ties included) and the identical-selections asserts
+        # below can never trip on rounding
+        scores = rng.integers(1, 1 << 12, len(fit)).astype(np.float64) / (1 << 12)
+        return windows, fit, win_idx, view, scores
+
+    host = make_round_selector(None)
+    batched = make_round_selector("numpy")
+    device = make_round_selector(device_impl)
+    reps = 5 if QUICK else 7
+    # wide rounds (many slices → many windows) are where the batched settle
+    # pays: more rows vectorize together AND the per-window lane count (the
+    # sequential DP depth) shrinks
+    grids = ((48, 1024), (64, 2048)) if QUICK else \
+        ((16, 1024), (32, 2048), (48, 1024), (64, 2048), (64, 4096))
+    for n_windows, m in grids:
+        windows, fit, win_idx, view, scores = make(m, n_windows)
+        members = _pool_members(n_windows, win_idx)
+        banned = np.zeros(len(fit), bool)
+        all_rows = list(range(n_windows))
+
+        def host_sweep():
+            # the pre-PR-5 per-window hot loop of fixed_point_settle
+            out = []
+            for k in all_rows:
+                ia = np.asarray(members[k], np.intp)
+                sel, _ = wis_select(view.t_start[ia], view.t_end[ia], scores[ia])
+                out.append([members[k][int(j)] for j in np.asarray(sel)])
+            return out
+
+        def batched_sweep(rs):
+            packed = rs.pack(members, view, scores)
+            return rs.select(packed, all_rows, banned)
+
+        # identical selections: sweep-level AND full settle_round-level
+        ref_sweep = host_sweep()
+        assert ref_sweep == batched_sweep(batched) == batched_sweep(device), \
+            f"batched sweep diverged at W={n_windows} M={m}"
+        base_rr = settle_round(windows, fit, win_idx, scores,
+                               selector=host, view=view)
+        for rs in (batched, device):
+            rr = settle_round(windows, fit, win_idx, scores,
+                              selector=rs, view=view)
+            assert ([tuple(v.variant_id for v in r.selected) for r in rr.results]
+                    == [tuple(v.variant_id for v in r.selected)
+                        for r in base_rr.results]), \
+                f"settle diverged under {rs!r} at W={n_windows} M={m}"
+
+        us_h_r, us_b_r, us_d_r = [], [], []
+        for i in range(reps):
+            # ABBA-paired minima (see round_throughput)
+            first, second = (host_sweep, lambda: batched_sweep(batched)) \
+                if i % 2 == 0 else (lambda: batched_sweep(batched), host_sweep)
+            x = _time(first, n=1, warmup=0)
+            y = _time(second, n=1, warmup=0)
+            h, b = (x, y) if i % 2 == 0 else (y, x)
+            us_h_r.append(h)
+            us_b_r.append(b)
+            us_d_r.append(_time(lambda: batched_sweep(device), n=1, warmup=0))
+        us_h, us_b, us_d = min(us_h_r), min(us_b_r), min(us_d_r)
+        emit(f"settle_throughput_W{n_windows}_M{m}", us_b,
+             f"host_loop_us={us_h:.0f} speedup={us_h / max(us_b, 1e-9):.2f}x "
+             f"device_us={us_d:.0f} device_speedup={us_h / max(us_d, 1e-9):.2f}x "
+             f"impl={device_impl} identical_selections=True")
+
+    # zero-retrace contract: ≥8 drifting (W, M, scores) rounds after a
+    # per-bucket warmup must never miss the settle jit cache
+    drift = [(8, 700), (4, 300), (6, 1024), (5, 512), (8, 650),
+             (4, 280), (6, 990), (5, 480), (7, 800), (3, 200)]
+    packs = {}
+    for i, (nw, m) in enumerate(drift):
+        windows, fit, win_idx, view, scores = make(m, nw)
+        members = _pool_members(nw, win_idx)
+        packed = device.pack(members, view, scores)
+        packs[i] = (packed, list(range(nw)), np.zeros(len(fit), bool))
+    for i in range(len(drift)):  # warmup pass: one compile per shape bucket
+        device.select(packs[i][0], packs[i][1], packs[i][2])
+    base = wis_ops.trace_counts()
+    for i in range(len(drift)):  # measured pass: same buckets, fresh dispatch
+        device.select(packs[i][0], packs[i][1], packs[i][2])
+    delta = {k: wis_ops.trace_counts()[k] - base[k] for k in base}
+    retraces = sum(delta.values())
+    assert retraces == 0, f"batched settle retraced: {delta}"
+    emit("settle_throughput_retraces", 0.0,
+         f"rounds={len(drift)} retraces=0 impl={device_impl}")
 
 
 # ---------------------------------------------------------------------------
@@ -721,6 +894,7 @@ BENCHES: Dict[str, Callable] = {
     "round_throughput": bench_round_throughput,
     "policy_clearing": bench_policy_clearing,
     "adaptive_bidding": bench_adaptive_bidding,
+    "settle_throughput": bench_settle_throughput,
     "score_dispatch": bench_score_dispatch,
     "pipeline_overlap": bench_pipeline_overlap,
     "kernels": bench_kernels,
@@ -728,8 +902,8 @@ BENCHES: Dict[str, Callable] = {
 
 # CI smoke subset: fast, no multi-minute simulator sweeps
 QUICK_BENCHES = ("table3_clearing", "round_throughput", "policy_clearing",
-                 "adaptive_bidding", "score_dispatch", "pipeline_overlap",
-                 "kernels")
+                 "adaptive_bidding", "settle_throughput", "score_dispatch",
+                 "pipeline_overlap", "kernels")
 
 
 def main() -> None:

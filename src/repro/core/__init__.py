@@ -50,7 +50,14 @@ from .scoring import (  # noqa: F401
     score_round,
     score_round_async,
 )
-from .wis import wis_brute_force, wis_select, wis_select_jax  # noqa: F401
+from .wis import (  # noqa: F401
+    RoundSelector,
+    make_round_selector,
+    wis_brute_force,
+    wis_select,
+    wis_select_batch,
+    wis_select_jax,
+)
 from .calibration import CalibrationConfig, Calibrator, per_variant_error, reliability  # noqa: F401
 from .fairness import AgePolicy, AgeTracker, jain_index  # noqa: F401
 from .windows import (  # noqa: F401

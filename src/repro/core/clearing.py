@@ -39,7 +39,7 @@ import numpy as np
 from .scoring import ScoringPolicy, score_pool, score_round_async
 from .types import (OVERLAP_EPS, TIME_EPS, ClearingResult, PoolView,
                     RoundResult, Variant, Window)
-from .wis import wis_select
+from .wis import make_round_selector, predispatch_settle, wis_select
 
 __all__ = ["clear_window", "clear_round", "assign_bids", "settle_round"]
 
@@ -176,6 +176,7 @@ def clear_round(
     grid: int = 32,
     grid_cache=None,
     clearing=None,
+    wis_impl: Optional[str] = None,
 ) -> RoundResult:
     """Clear one batched auction round over ALL announced windows.
 
@@ -195,11 +196,20 @@ def clear_round(
     :func:`settle_round`) so the round pipeline can overlap them across
     consecutive rounds.
 
+    ``wis_impl`` selects the settle-side WIS backend (overrides
+    ``selector``): None = the per-window host loop, "numpy" = batched host
+    float64, "ref"/"pallas" = the device-resident batched settle
+    (``kernels/wis_dp``).  With a device backend the ban-free first WIS
+    pass is FUSED behind the scoring dispatch — selection weights are
+    gathered from the still-in-flight device scores, no host round-trip.
+
     Returns a :class:`RoundResult`; ``results`` aligns with ``windows``.
     """
     windows = list(windows)
     if not windows:
         return RoundResult((), (), (), (), 0.0, 0)
+    if wis_impl is not None:
+        selector = make_round_selector(wis_impl)
 
     fit, win_idx, fit_view = assign_bids(windows, variants)
     if not fit:
@@ -213,10 +223,13 @@ def clear_round(
         grid=grid, grid_cache=grid_cache,
         view=fit_view,
     )
+    backend = clearing if clearing is not None else _default_clearing()
+    prefetch = predispatch_settle(
+        selector, backend, len(windows), win_idx, fit_view, handle)
     return settle_round(
         windows, fit, win_idx, handle.result(),
         selector=selector, work_budget=work_budget, view=fit_view,
-        clearing=clearing, ages=ages,
+        clearing=backend, ages=ages, prefetch=prefetch,
     )
 
 
@@ -231,6 +244,7 @@ def settle_round(
     view: Optional[PoolView] = None,
     clearing=None,
     ages: Optional[Mapping[str, float]] = None,
+    prefetch=None,
 ) -> RoundResult:
     """The post-scores half of :func:`clear_round`, dispatched through the
     ``clearing`` backend (default ``GreedyWIS``): WIS per window plus
@@ -240,9 +254,17 @@ def settle_round(
     of ``fit`` from :func:`assign_bids`) lets the per-window WIS passes
     gather interval arrays instead of re-walking the variant objects;
     ``ages`` feeds fairness-aware backends (ignored by ``GreedyWIS``).
+    ``prefetch`` (an in-flight fused first-pass WIS from
+    ``RoundSelector.predispatch``) is forwarded only to backends that
+    declare ``supports_prefetch`` — custom backends with the original
+    settle signature keep working unchanged.
     """
     backend = clearing if clearing is not None else _default_clearing()
+    kw = {}
+    if prefetch is not None and getattr(backend, "supports_prefetch", False):
+        kw["prefetch"] = prefetch
     return backend.settle(
         windows, fit, win_idx, scores,
         selector=selector, work_budget=work_budget, view=view, ages=ages,
+        **kw,
     )

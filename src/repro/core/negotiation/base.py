@@ -86,6 +86,7 @@ def chunk_chain_bids(
     shade: float = 1.0,
     chunk_scale: float = 1.0,
     alternatives: bool = True,
+    n_start_offsets: Optional[int] = None,
 ) -> List[Variant]:
     """The shared chunk-chain generator every shipped strategy builds on.
 
@@ -112,6 +113,14 @@ def chunk_chain_bids(
       each chain position (True = historical behavior); adaptive bidders
       turn it off so the per-window variant budget buys chain depth
       instead of head alternatives.
+    * ``n_start_offsets`` — start-time alternatives per chain position
+      (None = the agent's own ``AgentConfig.n_start_offsets``; default 1 =
+      historical behavior, byte-identical).  With n > 1, the position's
+      carrier chunk is re-offered at n−1 later starts, evenly spaced
+      within the SHORTEST alternative offered at the position — every
+      offset copy therefore overlaps every sibling (WIS keeps at most one
+      per position, preserving the chain's ≤-biddable-work invariant)
+      while giving the packing freedom to dodge a rival's interval edge.
     """
     if agent.finished or agent.biddable_work <= TIME_EPS:
         return []
@@ -121,6 +130,9 @@ def chunk_chain_bids(
     # condition (a): probabilistic safety against this slice's capacity
     if not agent.is_safe_on(window.capacity, theta):
         return []
+    if n_start_offsets is None:
+        n_start_offsets = getattr(agent.cfg, "n_start_offsets", 1)
+    n_start_offsets = max(1, int(n_start_offsets))
 
     variants: List[Variant] = []
     remaining = agent.biddable_work
@@ -136,16 +148,34 @@ def chunk_chain_bids(
         plans = chunk_candidates(ask, thr, span, agent.atomizer)
         if not plans:
             break
-        for plan in plans if alternatives else plans[:1]:
+        offered = plans if alternatives else plans[:1]
+        # emission order per position: carrier chunk, then its start-time
+        # alternatives (the knob the agent explicitly asked for — they get
+        # budget priority), then the smaller-chunk ladder.  With the
+        # default n_start_offsets=1 this is exactly the historical
+        # sequence, byte-identical.
+        position = [(t_cursor, plans[0])]
+        if n_start_offsets > 1:
+            # the carrier shifted by o·(d_min/n) for o = 1..n−1.  Offsets
+            # stay strictly inside the SHORTEST sibling's duration, so
+            # every copy overlaps every alternative at this position
+            # (mutual exclusivity under WIS: at most one committed per
+            # position); the chain cursor still advances from the
+            # unshifted carrier, so positions keep carving disjoint work.
+            delta = min(p.duration for p in offered) / n_start_offsets
+            position += [(t_cursor + o * delta, plans[0])
+                         for o in range(1, n_start_offsets)]
+        position += [(t_cursor, p) for p in offered[1:]]
+        for t0, plan in position:
             if len(variants) >= max_v:
                 break
-            if t_cursor + plan.duration > window.t_end + TIME_EPS:
+            if t0 + plan.duration > window.t_end + TIME_EPS:
                 continue
-            if agent._overlaps_own(t_cursor, plan.duration):
+            if agent._overlaps_own(t0, plan.duration):
                 continue  # job already committed elsewhere in this span
             variants.append(
                 agent.make_variant(
-                    window, t_cursor, plan, now, len(variants),
+                    window, t0, plan, now, len(variants),
                     shade=shade, theta=theta,
                 )
             )

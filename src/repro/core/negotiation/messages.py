@@ -32,9 +32,11 @@ feedback contents stay consistent across entry points.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Mapping, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
-from ..types import RoundResult, Variant, Window, overlaps
+import numpy as np
+
+from ..types import OVERLAP_EPS, PoolView, RoundResult, Variant, Window, overlaps
 
 __all__ = [
     "WindowAnnouncement",
@@ -153,6 +155,9 @@ def build_feedback(
     bids: Sequence[Sequence[Sequence[Variant]]],
     rr: RoundResult,
     calibrator=None,
+    *,
+    view: Optional[PoolView] = None,
+    win_idx=None,
 ) -> RoundFeedback:
     """Assemble the :class:`RoundFeedback` for one settled round.
 
@@ -161,8 +166,24 @@ def build_feedback(
     winner sets key on them.  ``calibrator`` is the scheduler's
     :class:`~repro.core.calibration.Calibrator` (None in stateless tests:
     the calibration maps come back empty-trust ρ=1).
+
+    When the caller supplies the round's ``view`` (the fitting pool's
+    :class:`~repro.core.types.PoolView`) and ``win_idx``, AND the clearing
+    reported per-window pool indices (``rr.selected_idx``), the award/loss
+    classification runs on numpy columns instead of walking the variant
+    objects: agents' bids occupy contiguous pool segments (the RoundPrep
+    pooling order), winners are a boolean column, self-conflict detection
+    is one pairwise interval matrix per agent.  Classification is
+    equivalence-tested against the object walk; any shape mismatch (bids
+    dropped by assign_bids, a custom backend without ``selected_idx``)
+    falls back to the walk.
     """
     windows = list(windows)
+    if (view is not None and win_idx is not None
+            and len(rr.selected_idx) == len(windows)
+            and len(view) == sum(len(g) for per in bids for g in per)):
+        return _build_feedback_vectorized(
+            now, windows, agents, bids, rr, calibrator, view, win_idx)
     # per-window winner ids + commit scores, and the cutoff price signal
     won_score: Dict[str, float] = {}
     winners_per_window: List[set] = []
@@ -218,6 +239,107 @@ def build_feedback(
             reliability[job_id] = float(st.rho)
             # the same windowed E_v[ε] that drives ρ (Eq. 7/8), not the
             # full-history mean — the two diverge for long-lived jobs
+            calibration_error[job_id] = float(
+                st.mean_error(calibrator.config.error_window)
+            )
+            calibration_bias[job_id] = float(st.bias)
+        else:
+            reliability[job_id] = 1.0
+            calibration_error[job_id] = 0.0
+            calibration_bias[job_id] = 0.0
+    return RoundFeedback(
+        t=now,
+        windows=tuple(windows),
+        cutoffs=cutoffs,
+        awards=awards,
+        losses=losses,
+        reliability=reliability,
+        calibration_error=calibration_error,
+        calibration_bias=calibration_bias,
+        n_selected=len(rr.selected),
+        n_conflicts=rr.n_conflicts,
+    )
+
+
+def _build_feedback_vectorized(
+    now: float,
+    windows: List[Window],
+    agents: Sequence,
+    bids: Sequence[Sequence[Sequence[Variant]]],
+    rr: RoundResult,
+    calibrator,
+    view: PoolView,
+    win_idx,
+) -> RoundFeedback:
+    """PoolView-column award/loss classification (the fast path).
+
+    Pool layout invariant (RoundPrep): bids are pooled agent-major,
+    window-major within an agent, and the caller verified nothing was
+    dropped by window assignment — so each agent owns one contiguous
+    segment of the pool and ``win_idx`` equals each bid's group index.
+    Output (tuples, ordering, reasons, cutoffs) is identical to the object
+    walk above, which remains the reference (equivalence-tested).
+    """
+    m = len(view)
+    win_k = np.asarray(win_idx, np.intp)
+    sel_mask = np.zeros(m, bool)
+    score_of = np.zeros(m, np.float64)
+    winner_count = np.zeros(len(windows), np.intp)
+    cutoffs: Dict[Tuple[str, float], float] = {}
+    for k, (sel_idx, result) in enumerate(zip(rr.selected_idx, rr.results)):
+        if sel_idx:
+            ia = np.asarray(sel_idx, np.intp)
+            sel_mask[ia] = True
+            score_of[ia] = np.asarray(result.scores, np.float64)
+        winner_count[k] = len(sel_idx)
+        cutoffs[windows[k].key] = float(min(result.scores)) if result.scores else 0.0
+
+    ts, te = view.t_start, view.t_end
+    vids = view.variant_ids
+    awards: Dict[str, Tuple[Award, ...]] = {}
+    losses: Dict[str, Tuple[LossReport, ...]] = {}
+    reliability: Dict[str, float] = {}
+    calibration_error: Dict[str, float] = {}
+    calibration_bias: Dict[str, float] = {}
+    lo = 0
+    for agent, per_window in zip(agents, bids):
+        job_id = agent.spec.job_id
+        n = sum(len(g) for g in per_window)
+        seg = np.arange(lo, lo + n)
+        lo += n
+        if n:
+            seg_sel = sel_mask[seg]
+            my_sel = seg[seg_sel]
+            if len(my_sel):
+                awards[job_id] = tuple(
+                    Award(vids[i], windows[win_k[i]], float(score_of[i]))
+                    for i in my_sel
+                )
+            loss_idx = seg[~seg_sel]
+            if len(loss_idx):
+                empty = winner_count[win_k[loss_idx]] == 0
+                if len(my_sel):
+                    ws, we = ts[my_sel], te[my_sel]
+                    ls, le = ts[loss_idx], te[loss_idx]
+                    olap = np.any(
+                        (ls[:, None] < we[None, :] - OVERLAP_EPS)
+                        & (ws[None, :] < le[:, None] - OVERLAP_EPS),
+                        axis=1,
+                    )
+                else:
+                    olap = np.zeros(len(loss_idx), bool)
+                my_losses = []
+                for i, is_empty, is_olap in zip(loss_idx, empty, olap):
+                    reason = (LOSS_WINDOW_EMPTY if is_empty
+                              else LOSS_SELF_CONFLICT if is_olap
+                              else LOSS_OUTSCORED)
+                    w = windows[win_k[i]]
+                    my_losses.append(
+                        LossReport(vids[i], w, reason, cutoffs.get(w.key, 0.0)))
+                losses[job_id] = tuple(my_losses)
+        if calibrator is not None:
+            st = calibrator.state(job_id)
+            reliability[job_id] = float(st.rho)
             calibration_error[job_id] = float(
                 st.mean_error(calibrator.config.error_window)
             )

@@ -52,6 +52,7 @@ import numpy as np
 from .clearing import assign_bids, settle_round
 from .scoring import ScoringPolicy, score_round_async
 from .types import RoundResult, Variant, Window
+from .wis import make_round_selector, predispatch_settle
 
 # NOTE: scheduler-level pipelining (RoundPipeline) needs no policy plumbing
 # of its own — JasdaScheduler._settle_round dispatches through the
@@ -190,6 +191,7 @@ def pipelined_clear_rounds(
     grid_cache=None,
     work_budget=None,
     clearing=None,
+    wis_impl: Optional[str] = None,
 ) -> List[RoundResult]:
     """Clear a stream of independent rounds with dispatch/settle overlap.
 
@@ -201,14 +203,25 @@ def pipelined_clear_rounds(
     ``clearing`` selects the settle backend (``repro.core.policy.
     ClearingPolicy``; None = GreedyWIS) — the overlap structure is
     backend-agnostic because settle is pure given its inputs.
+
+    ``wis_impl`` selects the settle-side WIS backend (see ``core.wis.
+    make_round_selector``); with a device backend ("ref"/"pallas") each
+    round's ban-free first WIS pass is dispatched right behind its scoring
+    call — score→clear chain on the async stream — so the settle half
+    overlaps the next round's host packing too.
     """
     results: List[RoundResult] = []
-    pending = None  # (windows, fit, win_idx, handle)
+    pending = None  # (windows, fit, win_idx, view, handle, prefetch)
+    selector = make_round_selector(wis_impl)
+    from .clearing import _default_clearing
+
+    backend = clearing if clearing is not None else _default_clearing()
 
     def dispatch(windows, pool):
         windows = list(windows)
         fit, win_idx, fit_view = assign_bids(windows, pool)
         handle = None
+        prefetch = None
         if fit:
             handle = score_round_async(
                 fit, windows, win_idx, policy,
@@ -217,14 +230,17 @@ def pipelined_clear_rounds(
                 grid=grid, grid_cache=grid_cache,
                 view=fit_view,
             )
-        return windows, fit, win_idx, fit_view, handle
+            prefetch = predispatch_settle(
+                selector, backend, len(windows), win_idx, fit_view, handle)
+        return windows, fit, win_idx, fit_view, handle, prefetch
 
     def settle(entry):
-        windows, fit, win_idx, fit_view, handle = entry
+        windows, fit, win_idx, fit_view, handle, prefetch = entry
         scores = handle.result() if handle is not None else np.zeros(0)
         return settle_round(windows, fit, win_idx, scores,
                             work_budget=work_budget, view=fit_view,
-                            clearing=clearing, ages=ages)
+                            clearing=backend, ages=ages,
+                            selector=selector, prefetch=prefetch)
 
     for windows, pool in rounds:
         entry = dispatch(windows, pool)  # host pack + async device dispatch

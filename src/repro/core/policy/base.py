@@ -41,7 +41,7 @@ from typing import Callable, Dict, List, Mapping, Optional, Sequence
 import numpy as np
 
 from ..types import PoolView, RoundResult, Variant, Window
-from ..wis import wis_select
+from ..wis import RoundSelector, SettlePrefetch, wis_select
 
 __all__ = ["ClearingPolicy", "fixed_point_settle"]
 
@@ -57,6 +57,13 @@ class ClearingPolicy(abc.ABC):
 
     #: short stable identifier used in logs / benchmark rows
     name: str = "abstract"
+
+    #: True when ``settle`` accepts the ``prefetch`` kwarg (an in-flight
+    #: fused first-pass WIS from ``core.wis.RoundSelector.predispatch``).
+    #: Only meaningful for backends that SELECT on the raw auction scores —
+    #: the prefetch was dispatched against them; backends that transform
+    #: selection scores (FairShare) must leave this False.
+    supports_prefetch: bool = False
 
     @abc.abstractmethod
     def settle(
@@ -103,6 +110,196 @@ def _empty_round(windows: Sequence[Window]) -> RoundResult:
     return _impl(windows)
 
 
+def _pool_members(n_windows: int, win_idx: Sequence[int]) -> List[List[int]]:
+    """window → pool indices (pool order), the layout every settle shares.
+
+    Vectorized grouping: a stable argsort of ``win_idx`` yields the pool
+    indices grouped by window with pool order preserved within each group —
+    identical content to the per-element append loop, at numpy speed.
+    """
+    win_k = np.asarray(win_idx)
+    if win_k.size == 0:
+        return [[] for _ in range(n_windows)]
+    order = np.argsort(win_k, kind="stable")
+    counts = np.bincount(win_k, minlength=n_windows)
+    splits = np.cumsum(counts)[:-1]
+    return [part.tolist() for part in np.split(order, splits)]
+
+
+class _FixedPointState:
+    """One resumable fixed-point settle (WIS sweeps + conflict resolution).
+
+    Extracted from the former monolithic loop so that (a) dirty windows of
+    one pass re-clear in ONE batched dispatch when the selector is a
+    :class:`~repro.core.wis.RoundSelector`, and (b) ``GlobalAssignment``
+    can drive MANY candidate-configuration replays in lockstep, batching
+    every live replay's dirty windows into a single dispatch per
+    generation.  Semantics are byte-identical to the original loop (pinned
+    by the frozen-reference tests): the state only re-sequences WHO calls
+    the selector, never what it selects.
+    """
+
+    def __init__(self, windows, fit, win_idx, sel_scores, view, members,
+                 selector, packed, work_budget, prefer):
+        self.windows = windows
+        self.fit = fit
+        self.win_idx = win_idx
+        self.sel_scores = sel_scores
+        self.view = view
+        self.members = members
+        self.selector = selector
+        self.rs = selector if isinstance(selector, RoundSelector) else None
+        self.packed = packed
+        self.work_budget = work_budget
+        self.prefer = prefer
+        self.banned = np.zeros(len(fit), dtype=bool)
+        self.selected: List[List[int]] = [[] for _ in windows]
+        self.dirty: List[int] = list(range(len(windows)))
+        self.n_conflicts = 0
+        self.active = True  # False once the fixed point is reached
+
+    def seed(self, first_pass: Sequence[Sequence[int]]) -> None:
+        """Adopt precomputed ban-free first-pass selections (skip sweep 1)."""
+        self.selected = [list(s) for s in first_pass]
+        self.dirty = []
+
+    def take_dirty(self) -> List[int]:
+        ks, self.dirty = self.dirty, []
+        return ks
+
+    def reclear(self, ks: Sequence[int]) -> None:
+        """Re-run WIS on the given windows over their unbanned candidates."""
+        if not ks:
+            return
+        if self.rs is not None:
+            for k, sel in zip(ks, self.rs.select(self.packed, ks, self.banned)):
+                self.selected[k] = sel
+            return
+        view, sel_scores = self.view, self.sel_scores
+        for k in ks:
+            idx = [i for i in self.members[k] if not self.banned[i]]
+            if not idx:
+                self.selected[k] = []
+                continue
+            ia = np.asarray(idx, np.intp)
+            sel, _ = self.selector(view.t_start[ia], view.t_end[ia], sel_scores[ia])
+            self.selected[k] = [idx[int(j)] for j in np.asarray(sel)]
+
+    def resolve(self) -> bool:
+        """One conflict-resolution pass; True while new bans were issued.
+
+        Per-job win lists across all windows, best score first (preferred
+        win first when the backend pinned one); drops cross-window
+        overlapping wins and work-budget overruns, marking their windows
+        dirty for the next re-clear sweep.  Interval/score reads go through
+        the PoolView columns (same float64 values as the variant attrs, at
+        array-index cost — replays hit this pass hundreds of times).
+        """
+        from ..types import OVERLAP_EPS
+
+        fit, win_idx, sel_scores = self.fit, self.win_idx, self.sel_scores
+        ts, te = self.view.t_start, self.view.t_end
+        job_ids = self.view.job_ids
+        eps = OVERLAP_EPS
+        prefer, work_budget = self.prefer, self.work_budget
+        wins_by_job: Dict[str, List[int]] = {}
+        for k, sel in enumerate(self.selected):
+            for i in sel:
+                wins_by_job.setdefault(job_ids[i], []).append(i)
+        newly_banned = False
+        for job_id, wins in wins_by_job.items():
+            if len(wins) < 2 and work_budget is None:
+                continue
+            pin = prefer.get(job_id) if prefer is not None else None
+            pins = (() if pin is None
+                    else (int(pin),) if isinstance(pin, (int, np.integer))
+                    else tuple(int(p) for p in pin))
+            wins.sort(key=lambda i: (0 if i in pins else 1,
+                                     -sel_scores[i], ts[i], win_idx[i]))
+            kept: List[int] = []
+            used_work = 0.0
+            budget = None
+            if work_budget is not None:
+                budget = work_budget.get(job_id)
+            for i in wins:
+                drop = any(ts[i] < te[j] - eps and ts[j] < te[i] - eps
+                           and win_idx[i] != win_idx[j]
+                           for j in kept)
+                if not drop and budget is not None:
+                    work = float(fit[i].payload["work"]) if fit[i].payload else 0.0
+                    if used_work + work > budget + 1e-9:
+                        drop = True
+                    else:
+                        used_work += work
+                if drop:
+                    self.banned[i] = True
+                    newly_banned = True
+                    self.n_conflicts += 1
+                    if win_idx[i] not in self.dirty:
+                        self.dirty.append(win_idx[i])
+                else:
+                    kept.append(i)
+        self.active = newly_banned
+        return newly_banned
+
+    def run_to_fixed_point(self) -> "_FixedPointState":
+        """Drive reclear/resolve until no new bans are issued; returns self."""
+        while True:
+            self.reclear(self.take_dirty())
+            if not self.resolve():
+                return self
+
+    def total(self, scores: np.ndarray) -> float:
+        """The cleared total this state would report, WITHOUT packaging.
+
+        Float-sum order replicates :meth:`package` exactly (per-window
+        ascending t_start, windows in order, one flat sum) so comparisons
+        between replays keep the packaged tie-break semantics bit-for-bit.
+        """
+        t_start = self.view.t_start
+        vals = [float(scores[i])
+                for k in range(len(self.windows))
+                for i in sorted(self.selected[k], key=t_start.__getitem__)]
+        return float(sum(vals))
+
+    def package(self, scores: np.ndarray) -> RoundResult:
+        """Per-window results + the flattened commit set (+ pool indices)."""
+        from ..types import ClearingResult
+
+        fit, members = self.fit, self.members
+        results: List[ClearingResult] = []
+        all_selected: List[Variant] = []
+        all_scores: List[float] = []
+        selected_idx: List[tuple] = []
+        for k, w in enumerate(self.windows):
+            sel = sorted(self.selected[k], key=lambda i: fit[i].t_start)
+            sel_set = set(sel)
+            rejected = tuple(fit[i] for i in members[k] if i not in sel_set)
+            results.append(
+                ClearingResult(
+                    window=w,
+                    selected=tuple(fit[i] for i in sel),
+                    scores=tuple(float(scores[i]) for i in sel),
+                    total_score=float(sum(scores[i] for i in sel)),
+                    n_bids=len(members[k]),
+                    rejected=rejected,
+                )
+            )
+            selected_idx.append(tuple(sel))
+            all_selected.extend(fit[i] for i in sel)
+            all_scores.extend(float(scores[i]) for i in sel)
+        return RoundResult(
+            windows=tuple(self.windows),
+            results=tuple(results),
+            selected=tuple(all_selected),
+            scores=tuple(all_scores),
+            total_score=float(sum(all_scores)),
+            n_bids=len(fit),
+            n_conflicts=self.n_conflicts,
+            selected_idx=tuple(selected_idx),
+        )
+
+
 def fixed_point_settle(
     windows: Sequence[Window],
     fit: Sequence[Variant],
@@ -115,6 +312,9 @@ def fixed_point_settle(
     select_scores: Optional[np.ndarray] = None,
     prefer: Optional[Mapping[str, int]] = None,
     first_pass_sink: Optional[List[List[int]]] = None,
+    first_pass: Optional[Sequence[Sequence[int]]] = None,
+    packed=None,
+    prefetch: Optional[SettlePrefetch] = None,
 ) -> RoundResult:
     """WIS per window + iterated cross-window conflict resolution.
 
@@ -125,6 +325,12 @@ def fixed_point_settle(
     total work than it has — and conflicting wins are revoked.  Windows that
     lose a winner are re-cleared within the round; bans grow monotonically,
     so the loop reaches a fixed point in ≤ |pool| passes.
+
+    ``selector`` is either the classic per-window callable (default
+    :func:`wis_select`) or a batched :class:`~repro.core.wis.RoundSelector`
+    — then every sweep (the ban-free first pass AND each conflict
+    re-clear) dispatches ALL its dirty windows at once from retained packed
+    buffers instead of looping windows on the host.
 
     Hooks the backends compose:
 
@@ -143,6 +349,15 @@ def fixed_point_settle(
       conflict resolution starts, so callers that need the pre-resolution
       win structure (conflict-cluster discovery) don't re-run the
       per-window WIS sweep.
+    * ``first_pass`` — the inverse: adopt precomputed ban-free first-pass
+      selections and skip the initial sweep entirely (the first pass is
+      ban-free and prefer-independent, so it is identical across
+      ``GlobalAssignment``'s candidate-configuration replays).
+    * ``packed`` — retained :class:`~repro.core.wis.PackedSettle` buffers
+      to dispatch from (RoundSelector only); lets replays share one pack.
+    * ``prefetch`` — an in-flight fused first pass dispatched against the
+      round's device scores (``RoundSelector.predispatch``); only honored
+      when selection runs on the raw scores (``select_scores is None``).
     """
     windows = list(windows)
     if not fit:
@@ -151,107 +366,29 @@ def fixed_point_settle(
         view = PoolView.build(fit)
     sel_scores = scores if select_scores is None else np.asarray(select_scores)
 
-    from ..clearing import _overlap
+    members = (packed.members if packed is not None
+               else _pool_members(len(windows), win_idx))
+    if (prefetch is not None and select_scores is None and first_pass is None):
+        first_pass, packed = prefetch.materialize(scores)
+        members = packed.members
+    rs = selector if isinstance(selector, RoundSelector) else None
+    if rs is not None and packed is None:
+        packed = rs.pack(members, view, sel_scores)
 
-    members: List[List[int]] = [[] for _ in windows]  # window -> pool indices
-    for i, k in enumerate(win_idx):
-        members[k].append(i)
-
-    banned = np.zeros(len(fit), dtype=bool)
-    selected_per_window: List[List[int]] = [[] for _ in windows]
-    dirty = list(range(len(windows)))
-    n_conflicts = 0
-
-    def _reclear(k: int) -> None:
-        idx = [i for i in members[k] if not banned[i]]
-        if not idx:
-            selected_per_window[k] = []
-            return
-        ia = np.asarray(idx, np.intp)
-        sel, _ = selector(view.t_start[ia], view.t_end[ia], sel_scores[ia])
-        selected_per_window[k] = [idx[int(j)] for j in np.asarray(sel)]
+    st = _FixedPointState(windows, fit, win_idx, sel_scores, view, members,
+                          selector, packed, work_budget, prefer)
+    if first_pass is not None:
+        st.seed(first_pass)
 
     # fixed point: each pass bans ≥ 1 variant or terminates, so the loop is
     # bounded by the pool size
-    first_pass = True
+    first_sweep = True
     while True:
-        for k in dirty:
-            _reclear(k)
-        dirty = []
-        if first_pass:
-            first_pass = False
+        st.reclear(st.take_dirty())
+        if first_sweep:
+            first_sweep = False
             if first_pass_sink is not None:
-                first_pass_sink.extend(list(s) for s in selected_per_window)
-
-        # per-job win lists across all windows, best score first (preferred
-        # win first when the backend pinned one)
-        wins_by_job: Dict[str, List[int]] = {}
-        for k, sel in enumerate(selected_per_window):
-            for i in sel:
-                wins_by_job.setdefault(fit[i].job_id, []).append(i)
-        newly_banned = False
-        for job_id, wins in wins_by_job.items():
-            if len(wins) < 2 and work_budget is None:
-                continue
-            pin = prefer.get(job_id) if prefer is not None else None
-            pins = (() if pin is None
-                    else (int(pin),) if isinstance(pin, (int, np.integer))
-                    else tuple(int(p) for p in pin))
-            wins.sort(key=lambda i: (0 if i in pins else 1,
-                                     -sel_scores[i], fit[i].t_start, win_idx[i]))
-            kept: List[int] = []
-            used_work = 0.0
-            budget = None
-            if work_budget is not None:
-                budget = work_budget.get(job_id)
-            for i in wins:
-                drop = any(_overlap(fit[i], fit[j]) and win_idx[i] != win_idx[j]
-                           for j in kept)
-                if not drop and budget is not None:
-                    work = float(fit[i].payload["work"]) if fit[i].payload else 0.0
-                    if used_work + work > budget + 1e-9:
-                        drop = True
-                    else:
-                        used_work += work
-                if drop:
-                    banned[i] = True
-                    newly_banned = True
-                    n_conflicts += 1
-                    if win_idx[i] not in dirty:
-                        dirty.append(win_idx[i])
-                else:
-                    kept.append(i)
-        if not newly_banned:
+                first_pass_sink.extend(list(s) for s in st.selected)
+        if not st.resolve():
             break
-
-    # -- package per-window results + the flattened commit set ----------------
-    from ..types import ClearingResult
-
-    results: List[ClearingResult] = []
-    all_selected: List[Variant] = []
-    all_scores: List[float] = []
-    for k, w in enumerate(windows):
-        sel = sorted(selected_per_window[k], key=lambda i: fit[i].t_start)
-        sel_set = set(sel)
-        rejected = tuple(fit[i] for i in members[k] if i not in sel_set)
-        results.append(
-            ClearingResult(
-                window=w,
-                selected=tuple(fit[i] for i in sel),
-                scores=tuple(float(scores[i]) for i in sel),
-                total_score=float(sum(scores[i] for i in sel)),
-                n_bids=len(members[k]),
-                rejected=rejected,
-            )
-        )
-        all_selected.extend(fit[i] for i in sel)
-        all_scores.extend(float(scores[i]) for i in sel)
-    return RoundResult(
-        windows=tuple(windows),
-        results=tuple(results),
-        selected=tuple(all_selected),
-        scores=tuple(all_scores),
-        total_score=float(sum(all_scores)),
-        n_bids=len(fit),
-        n_conflicts=n_conflicts,
-    )
+    return st.package(scores)

@@ -27,6 +27,9 @@ class GreedyWIS(ClearingPolicy):
     """Greedy keep-best-win clearing (the default backend, zero knobs)."""
 
     name = "greedy_wis"
+    # selection runs on the raw auction scores, so a fused first-pass WIS
+    # dispatched against the in-flight device scores is directly usable
+    supports_prefetch = True
 
     def settle(
         self,
@@ -39,8 +42,10 @@ class GreedyWIS(ClearingPolicy):
         work_budget: Optional[Mapping[str, float]] = None,
         view: Optional[PoolView] = None,
         ages: Optional[Mapping[str, float]] = None,
+        prefetch=None,
     ) -> RoundResult:
         return fixed_point_settle(
             windows, fit, win_idx, scores,
             selector=selector, work_budget=work_budget, view=view,
+            prefetch=prefetch,
         )

@@ -103,6 +103,14 @@ class SchedulerConfig:
     # batched-scoring backend override: None = auto (Pallas on TPU, jnp
     # reference elsewhere); "numpy" | "ref" | "pallas" to force
     score_impl: Optional[str] = None
+    # settle-side WIS backend (the device-resident batched settle): None =
+    # the historical per-window host loop (byte-identical default);
+    # "numpy" = batched host float64 (byte-identical, one DP loop per lane
+    # for all windows); "ref" | "pallas" = kernels/wis_dp device dispatch
+    # with the first WIS pass fused behind the scoring dispatch.  A runtime
+    # knob like score_impl — it changes WHERE clearing runs, never what is
+    # selected (parity is gated by tests/test_device_settle.py).
+    wis_impl: Optional[str] = None
     # re-verify safety condition (a) in-dispatch with this θ against each
     # bid's OWN window capacity (per-variant capacities; heterogeneous
     # slices).  None = off: generation already enforces condition (a).
@@ -247,6 +255,9 @@ class RoundPrep:
     budget: Dict[str, float] = field(default_factory=dict)
     ages: Optional[Dict[str, float]] = None  # A_i(now), reused by settle
     handle: Optional[object] = None  # scoring.ScoreHandle
+    # in-flight fused first-pass WIS chained on the scoring dispatch
+    # (core.wis.SettlePrefetch; device wis_impl + prefetch-capable backend)
+    wis_prefetch: Optional[object] = None
     stats_snap: Optional[Dict[str, Tuple[int, int]]] = None  # speculative only
 
 
@@ -314,6 +325,12 @@ class JasdaScheduler:
         from ..kernels.jasda_score.ops import FMPGridCache
 
         self._grid_cache = FMPGridCache(maxsize=self.config.grid_cache_size)
+        # settle-side WIS backend (SchedulerConfig.wis_impl): the default is
+        # the historical per-window host loop; the batched backends clear
+        # every window of a round in one dispatch (core/wis.py)
+        from .wis import make_round_selector
+
+        self._wis_selector = make_round_selector(self.config.wis_impl)
 
     # -- membership -----------------------------------------------------------
     def add_job(self, agent: JobAgent, now: float) -> None:
@@ -461,6 +478,7 @@ class JasdaScheduler:
         prep.budget = budget
         prep.fit, prep.win_idx, prep.view = assign_bids(prep.windows, pool)
         prep.handle = None
+        prep.wis_prefetch = None
         prep.ages = self.ages.ages(prep.now)
         if prep.fit:
             # Step 4a: ONE batched scoring dispatch, left in flight (JAX
@@ -477,6 +495,16 @@ class JasdaScheduler:
                 grid_cache=self._grid_cache,
                 view=prep.view,
             )
+            # Step 4a': fused score→clear — with a device wis_impl the
+            # ban-free first WIS pass is dispatched right behind the
+            # scoring call, consuming the still-in-flight device scores.
+            # Settle (and, pipelined, the next round's host prep) then
+            # overlaps the whole score+clear chain instead of just scoring.
+            from .wis import predispatch_settle
+
+            prep.wis_prefetch = predispatch_settle(
+                self._wis_selector, self.policy.clearing,
+                len(prep.windows), prep.win_idx, prep.view, prep.handle)
 
     # -- settle half: block on scores, clear, commit ---------------------------
     def _settle_round(self, prep: RoundPrep) -> Optional[RoundResult]:
@@ -485,10 +513,19 @@ class JasdaScheduler:
             return None
         scores = prep.handle.result() if prep.handle is not None else np.zeros(0)
         # Step 4b: selection + conflict resolution, dispatched through the
-        # configured clearing backend (Policy.clearing; GreedyWIS default).
+        # configured clearing backend (Policy.clearing; GreedyWIS default)
+        # with the configured WIS selector; the fused first-pass prefetch is
+        # forwarded only to backends that declare support for it (custom
+        # backends with the original settle signature stay compatible).
+        kw = {}
+        if (prep.wis_prefetch is not None
+                and getattr(self.policy.clearing, "supports_prefetch", False)):
+            kw["prefetch"] = prep.wis_prefetch
         rr = self.policy.clearing.settle(
             prep.windows, prep.fit, prep.win_idx, scores,
+            selector=self._wis_selector,
             work_budget=prep.budget, view=prep.view, ages=prep.ages,
+            **kw,
         )
 
         # Step 5: commit winners; suppress windows that cleared empty.
@@ -519,7 +556,8 @@ class JasdaScheduler:
         # preparations exactly like a state mutation: epoch-validated, the
         # same protocol that guards dead windows (core/pipeline.py).
         feedback = build_feedback(
-            now, prep.windows, prep.agents, prep.bids, rr, self.calibrator
+            now, prep.windows, prep.agents, prep.bids, rr, self.calibrator,
+            view=prep.view, win_idx=prep.win_idx,
         )
         adapted = False
         for agent in prep.agents:

@@ -261,19 +261,34 @@ class ScoreHandle:
     host work for round k+1 while the scores are in flight, and settles k
     via ``result()``.  The numpy small-pool path is eager (already a host
     array) so ``result()`` is free.
+
+    Device handles keep the BUCKET-PADDED score array (``m`` marks the real
+    pool size, sliced off at ``result()``): the padded shape is what lets
+    the fused settle dispatch (``core.wis.RoundSelector.predispatch``)
+    gather selection weights from :attr:`device_scores` without a per-pool-
+    size retrace — pool indices are always < m ≤ m_pad, so padding never
+    leaks into a selection.
     """
 
-    def __init__(self, scores):
+    def __init__(self, scores, m: Optional[int] = None):
         self._scores = scores
+        self._m = m
 
     @property
     def in_flight(self) -> bool:
         """True while the scores are still device-side (worth overlapping)."""
         return not isinstance(self._scores, np.ndarray)
 
+    @property
+    def device_scores(self):
+        """The raw (possibly padded, possibly in-flight) scores array."""
+        return self._scores
+
     def result(self) -> np.ndarray:
-        # np.asarray on a jax array blocks until the computation lands
-        self._scores = np.asarray(self._scores, dtype=np.float64)
+        if not isinstance(self._scores, np.ndarray):
+            # np.asarray on a jax array blocks until the computation lands
+            arr = np.asarray(self._scores, dtype=np.float64)
+            self._scores = arr[: self._m] if self._m is not None else arr
         return self._scores
 
 
@@ -351,14 +366,18 @@ def score_round_async(
 
     from ..kernels.jasda_score.ops import score_variants
 
+    # trim=False keeps the bucket-padded device array on the handle: the
+    # fused settle dispatch gathers weights from it shape-stably (padded
+    # rows are self-masking, and result() slices back to m on the host)
     scores, _, _ = score_variants(
         packed.fj, packed.fs, packed.alphas, packed.betas, packed.mu, packed.sg,
         lam=policy.lam,
         capacity=packed.caps if recheck else 1.0,
         theta=packed.thetas if recheck else 1.0,
         impl=impl,
+        trim=False,
     )
-    return ScoreHandle(scores)
+    return ScoreHandle(scores, m=m)
 
 
 def score_round(

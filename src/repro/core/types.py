@@ -240,6 +240,12 @@ class RoundResult:
     n_bids: int
     n_bidders: int = 0
     n_conflicts: int = 0
+    # per-window tuples of SELECTED pool indices (into the round's fitting
+    # pool, aligned with ``results``) — lets downstream consumers (the
+    # vectorized RoundFeedback assembly) classify winners from PoolView
+    # columns without re-identifying variant objects.  Backends that do not
+    # track pool indices may leave it empty (callers must fall back).
+    selected_idx: Sequence = ()
 
 
 # ---------------------------------------------------------------------------
@@ -267,24 +273,26 @@ class PoolView:
     slice_ids: list  # per-variant slice id strings
     job_ids: list  # per-variant job id strings
     fmps: list  # per-variant FMP references
+    variant_ids: list  # per-variant id strings (round-unique)
 
     @classmethod
     def build(cls, variants: Sequence[Variant]) -> "PoolView":
         if not variants:
             z = np.zeros(0, np.float64)
-            return cls([], z, z.copy(), z.copy(), z.copy(), z.copy(), [], [], [])
+            return cls([], z, z.copy(), z.copy(), z.copy(), z.copy(),
+                       [], [], [], [])
         rows = [
             (v.t_start, v.duration, v.slice_id, v.job_id, v.fmp,
-             v.local_utility, v.theta)
+             v.local_utility, v.theta, v.variant_id)
             for v in variants
         ]
-        ts, dur, sids, jids, fmps, h, th = zip(*rows)
+        ts, dur, sids, jids, fmps, h, th, vids = zip(*rows)
         t_start = np.asarray(ts, np.float64)
         duration = np.asarray(dur, np.float64)
         return cls(
             list(variants), t_start, duration, t_start + duration,
             np.asarray(h, np.float64), np.asarray(th, np.float64),
-            list(sids), list(jids), list(fmps),
+            list(sids), list(jids), list(fmps), list(vids),
         )
 
     def __len__(self) -> int:
@@ -299,6 +307,7 @@ class PoolView:
             [self.slice_ids[i] for i in idx],
             [self.job_ids[i] for i in idx],
             [self.fmps[i] for i in idx],
+            [self.variant_ids[i] for i in idx],
         )
 
 

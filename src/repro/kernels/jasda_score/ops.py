@@ -109,6 +109,7 @@ def score_variants(
     impl: Optional[str] = None,
     block_m: int = 256,
     bucket: bool = True,
+    trim: bool = True,
 ):
     """Batched scoring dispatch: Pallas on TPU, jnp reference elsewhere.
 
@@ -120,6 +121,10 @@ def score_variants(
 
     Returns ``(score, eligible, p_exceed)`` aligned with the input rows;
     ``p_exceed`` is None on the Pallas path (not materialized in-kernel).
+    ``trim=False`` returns the full BUCKET-PADDED arrays instead (padded
+    rows score 0/ineligible by construction) — callers that chain further
+    device work on the in-flight scores (the fused settle dispatch) need
+    the shape-stable padded form to stay retrace-free.
     """
     feat_job = np.asarray(feat_job, np.float32)
     feat_sys = np.asarray(feat_sys, np.float32)
@@ -143,11 +148,12 @@ def score_variants(
     cap_v = _per_variant_np(capacity, m, 0.0, m_pad)
     th_v = _per_variant_np(theta, m, 0.0, m_pad)
 
+    end = m if trim else m_pad
     if impl == "ref":
         score, elig, p_exceed = _score_ref_jit(
             fj, fs, alphas, betas, mu_p, sg_p, lam_v, cap_v, th_v
         )
-        return score[:m], elig[:m], p_exceed[:m]
+        return score[:end], elig[:end], p_exceed[:end]
 
     bm = min(block_m, max(8, m_pad))
     score, elig = score_variants_pallas(
@@ -156,7 +162,7 @@ def score_variants(
         block_m=bm, interpret=use_interpret(),
     )
     # kernel does not return p_exceed; recompute lazily only if needed
-    return score[:m], elig[:m], None
+    return score[:end], elig[:end], None
 
 
 def score_variants_numpy(

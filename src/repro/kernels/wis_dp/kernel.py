@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-__all__ = ["wis_dp_pallas"]
+__all__ = ["wis_dp_pallas", "wis_batch_pallas"]
 
 
 def _dp_kernel(w_ref, p_ref, dp_ref, take_ref, dp_scr, *, m: int):
@@ -65,3 +65,78 @@ def wis_dp_pallas(weights: jnp.ndarray, pred: jnp.ndarray, *, interpret: bool = 
         interpret=interpret,
     )(weights[None, :].astype(jnp.float32), pred[None, :].astype(jnp.int32))
     return dp[0], take[0].astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-window DP + backtrack (device-resident settle, one dispatch)
+# ---------------------------------------------------------------------------
+
+
+def _batch_kernel(w_ref, p_ref, sel_ref, total_ref, dp_scr, take_scr, *, m: int):
+    """One grid program = one window: forward DP, then in-kernel backtrack.
+
+    The backward pass is the classical data-dependent walk (j = pred[j-1]
+    when lane j-1 was taken, else j-1) expressed as a bounded fori_loop over
+    a cursor — j strictly decreases every active step, so m steps always
+    reach j = 0; inactive steps rewrite lane 0 with its current value.
+    Everything stays VMEM-resident; the grid dimension batches windows.
+    """
+    dp_scr[...] = jnp.zeros_like(dp_scr)
+    sel_ref[...] = jnp.zeros_like(sel_ref)
+
+    def fwd(j, _):
+        w_j = w_ref[0, j]
+        p_j = p_ref[0, j]
+        with_j = w_j + dp_scr[0, p_j]
+        without_j = dp_scr[0, j]
+        take = with_j > without_j
+        dp_scr[0, j + 1] = jnp.where(take, with_j, without_j)
+        take_scr[0, j] = take.astype(jnp.int32)
+        return 0
+
+    jax.lax.fori_loop(0, m, fwd, 0)
+    total_ref[0, 0] = dp_scr[0, m]
+
+    def bwd(_, j):
+        jm1 = jnp.maximum(j - 1, 0)
+        active = j > 0
+        t = jnp.logical_and(active, take_scr[0, jm1] > 0)
+        sel_ref[0, jm1] = jnp.where(t, 1, sel_ref[0, jm1])
+        return jnp.where(active, jnp.where(t, p_ref[0, jm1], j - 1), 0)
+
+    jax.lax.fori_loop(0, m, bwd, jnp.int32(m))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wis_batch_pallas(weights: jnp.ndarray, pred: jnp.ndarray, *, interpret: bool = False):
+    """Batched WIS: (W, L) sorted weights + predecessors → (sel, totals).
+
+    Same per-row contract as ``wis_batch_reference`` (ref.py): rows are
+    windows, lanes are candidates sorted ascending by end time, padded /
+    banned lanes carry weight 0 (never taken under the strict ``>`` rule).
+    Returns the selection mask in sorted lane order plus per-window optimal
+    totals — the whole round's clearing in ONE dispatch.
+    """
+    w, m = weights.shape
+    sel, total = pl.pallas_call(
+        functools.partial(_batch_kernel, m=m),
+        grid=(w,),
+        in_specs=[
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((w, m), jnp.int32),
+            jax.ShapeDtypeStruct((w, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, m + 1), jnp.float32),
+            pltpu.VMEM((1, m), jnp.int32),
+        ],
+        interpret=interpret,
+    )(weights.astype(jnp.float32), pred.astype(jnp.int32))
+    return sel.astype(bool), total[:, 0]

@@ -1,11 +1,23 @@
-"""Jit'd wrapper: full on-device WIS clearing (sort → DP kernel → backtrack).
+"""Jit'd wrappers: on-device WIS clearing (sort → DP kernel → backtrack).
 
 ``wis_clear`` has the same contract as ``core.wis.wis_select`` (returns
 selected ORIGINAL indices sorted ascending by end time + total weight), so
 it can be plugged into ``clearing.clear_window(selector=...)`` directly.
+
+``wis_settle_batch`` / ``wis_settle_fused`` are the batched multi-window
+forms behind the device-resident round settle (core/wis.py
+``RoundSelector``): one dispatch clears EVERY window of an auction round.
+They follow the ``jasda_score`` zero-recompile contract — weights and
+predecessor tables are runtime operands, shapes are pow2-bucketed by the
+caller, and ``trace_counts`` exposes jit cache misses so benchmarks can
+assert the cache is never missed across drifting (W, M) rounds.  The fused
+form gathers its weights from the IN-FLIGHT device scores of the round's
+``jasda_score`` dispatch, so scores flow into selection without a host
+round-trip.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional, Tuple
 
 import jax
@@ -13,10 +25,90 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..common import use_interpret
-from .kernel import wis_dp_pallas
-from .ref import wis_dp_reference
+from .kernel import wis_batch_pallas, wis_dp_pallas
+from .ref import wis_batch_reference, wis_dp_reference
 
-__all__ = ["wis_clear", "wis_dp"]
+__all__ = [
+    "wis_clear",
+    "wis_dp",
+    "wis_settle_batch",
+    "wis_settle_fused",
+    "trace_counts",
+]
+
+# Incremented when a batched-settle jit wrapper RETRACES (python body runs
+# only on a jit cache miss) — the settle_throughput benchmark asserts these
+# stay flat across rounds with drifting (W, M, scores).
+TRACE_COUNT = {"settle_ref": 0, "settle_pallas": 0}
+
+
+def trace_counts() -> dict:
+    """Cumulative retrace counters for the batched settle dispatches."""
+    return dict(TRACE_COUNT)
+
+
+@jax.jit
+def _settle_ref_jit(weights, pred):
+    TRACE_COUNT["settle_ref"] += 1
+    return wis_batch_reference(weights, pred)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _settle_pallas_jit(weights, pred, interpret):
+    TRACE_COUNT["settle_pallas"] += 1
+    return wis_batch_pallas(weights, pred, interpret=interpret)
+
+
+@jax.jit
+def _settle_ref_fused_jit(scores, idx, mask, pred):
+    TRACE_COUNT["settle_ref"] += 1
+    w = jnp.where(mask, scores[jnp.clip(idx, 0, scores.shape[0] - 1)], 0.0)
+    return wis_batch_reference(w.astype(jnp.float32), pred)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _settle_pallas_fused_jit(scores, idx, mask, pred, interpret):
+    TRACE_COUNT["settle_pallas"] += 1
+    w = jnp.where(mask, scores[jnp.clip(idx, 0, scores.shape[0] - 1)], 0.0)
+    return wis_batch_pallas(w.astype(jnp.float32), pred, interpret=interpret)
+
+
+def wis_settle_batch(weights, pred, *, impl: Optional[str] = None):
+    """Batched multi-window WIS: (W, L) sorted weights/pred → (sel, totals).
+
+    Rows are windows, lanes candidates sorted ascending by end time (the
+    host pack in core/wis.py produces the layout); padded / banned lanes
+    carry weight 0 and are provably never selected under the strict ``>``
+    tie rule.  Returns jax arrays (left in flight — np.asarray to block).
+    """
+    weights = jnp.asarray(weights, jnp.float32)
+    pred = jnp.asarray(pred, jnp.int32)
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return _settle_ref_jit(weights, pred)
+    return _settle_pallas_jit(weights, pred, use_interpret())
+
+
+def wis_settle_fused(scores, idx, mask, pred, *, impl: Optional[str] = None):
+    """Fused score→clear dispatch: gather weights from IN-FLIGHT scores.
+
+    ``scores`` is the (M_pad,) device array of a ``jasda_score`` round
+    dispatch (still in flight); ``idx``/``mask``/``pred`` are the host-built
+    (W, L) sorted-lane layout (pool index per lane, validity, predecessor
+    counts).  The gather chains on the scoring computation on the async
+    stream, so the round's selection never waits on a device→host→device
+    round-trip.  Returns the in-flight (sel, totals) pair.
+    """
+    scores = jnp.asarray(scores)
+    idx = jnp.asarray(idx, jnp.int32)
+    mask = jnp.asarray(mask, bool)
+    pred = jnp.asarray(pred, jnp.int32)
+    if impl is None:
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return _settle_ref_fused_jit(scores, idx, mask, pred)
+    return _settle_pallas_fused_jit(scores, idx, mask, pred, use_interpret())
 
 
 def wis_dp(weights, pred, *, impl: Optional[str] = None):

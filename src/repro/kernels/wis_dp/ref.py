@@ -6,14 +6,21 @@ predecessors p(j) (both produced by ops.py on host/device):
     dp[0] = 0;  dp[j+1] = max(dp[j], w[j] + dp[p[j]])
     take[j] = (w[j] + dp[p[j]] > dp[j])
 
-Returns (dp[1:], take); backtracking runs in ops.py.
+``wis_dp_reference`` returns (dp[1:], take) for one window; backtracking
+runs in ops.py.  ``wis_batch_reference`` is the multi-window form the
+device-resident settle dispatches: DP *and* backtrack for a whole
+``(W, L)`` padded round in one call (vmapped scan; the backtrack is a
+bounded cursor scan, the same control flow the Pallas kernel lowers).
+Padded / banned lanes carry weight 0 — with the strict ``>`` tie rule a
+zero-weight lane is provably never taken, which is what lets the settle
+path ban lanes by zeroing instead of re-sorting (see core/wis.py).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["wis_dp_reference"]
+__all__ = ["wis_dp_reference", "wis_batch_reference"]
 
 
 def wis_dp_reference(weights: jnp.ndarray, pred: jnp.ndarray):
@@ -30,3 +37,44 @@ def wis_dp_reference(weights: jnp.ndarray, pred: jnp.ndarray):
     dp0 = jnp.zeros((m + 1,), weights.dtype)
     dp, take = jax.lax.scan(step, dp0, jnp.arange(m))
     return dp[1:], take
+
+
+def _backtrack_one(take: jnp.ndarray, pred: jnp.ndarray) -> jnp.ndarray:
+    """Selection mask (sorted order) from one window's take/pred tables.
+
+    The classical data-dependent while loop (j = pred[j-1] on take, else
+    j-1) runs at most L steps because j strictly decreases; expressing it
+    as a bounded ``lax.scan`` over a cursor keeps it vmappable across
+    windows.  Inactive steps revisit lane 0 with take=False, so the
+    scatter-max never flips a decided lane.
+    """
+    L = take.shape[0]
+
+    def step(j, _):
+        jm1 = jnp.maximum(j - 1, 0)
+        active = j > 0
+        t = jnp.logical_and(active, take[jm1])
+        nxt = jnp.where(active, jnp.where(t, pred[jm1], j - 1), 0)
+        return nxt, (jm1, t)
+
+    _, (pos, tk) = jax.lax.scan(step, jnp.int32(L), None, length=L)
+    sel = jnp.zeros((L,), bool).at[pos].max(tk)
+    return sel
+
+
+def wis_batch_reference(weights: jnp.ndarray, pred: jnp.ndarray):
+    """Batched multi-window DP + backtrack.
+
+    Args:
+      weights: (W, L) float32, sorted by end time per row, 0 on padded /
+        banned lanes.
+      pred: (W, L) int32 predecessor counts per row (indexes dp[0..L]).
+
+    Returns:
+      (sel (W, L) bool selection mask in SORTED lane order,
+       total (W,) float32 optimal totals).
+    """
+    dp, take = jax.vmap(wis_dp_reference)(weights, pred)
+    sel = jax.vmap(_backtrack_one)(take, pred)
+    total = dp[:, -1] if dp.shape[-1] else jnp.zeros((dp.shape[0],), weights.dtype)
+    return sel, total
