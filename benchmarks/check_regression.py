@@ -33,6 +33,14 @@ Two classes of check:
       than ``tol`` below baseline, and ``settle_throughput_retraces``
       must report ``retraces=0`` (exact — the zero-recompile contract of
       the batched settle dispatch).
+    - ``shard_scaling_*``: ``identical_selections=True`` must hold (the
+      mesh-sharded dispatch is byte-identical to single-device, exact),
+      ``shard_scaling_retraces`` must report ``retraces=0``, and the
+      sharded/unsharded ``scaling=`` ratio may not drop more than ``tol``
+      below baseline.  CI runners time-slice the 8 virtual devices on 1-2
+      physical cores, so the gated ratio reflects dispatch overhead and
+      cache locality, not the ≥3x real multi-device scaling (the
+      pipeline_overlap precedent).
     - ``adaptive_bidding_*``: ``adaptive_ok=True`` must hold — the
       ``AdaptiveBidder`` strategy must strictly out-clear
       ``GreedyChunking`` on the contention scenario (the negotiation
@@ -66,7 +74,8 @@ import re
 import sys
 
 GATED_PREFIXES = ("round_throughput_", "score_dispatch_", "pipeline_overlap_",
-                  "policy_clearing_", "adaptive_bidding_", "settle_throughput_")
+                  "policy_clearing_", "adaptive_bidding_", "settle_throughput_",
+                  "shard_scaling_")
 
 
 def _load(path: str) -> dict:
@@ -92,7 +101,8 @@ def check(fresh: dict, baseline: dict, tol: float, us_tol: float,
             failures.append(f"{name}: gated row missing from fresh results")
             continue
 
-        if name in ("score_dispatch_retraces", "settle_throughput_retraces"):
+        if name in ("score_dispatch_retraces", "settle_throughput_retraces",
+                    "shard_scaling_retraces"):
             if "retraces=0" not in row.get("derived", ""):
                 failures.append(
                     f"{name}: expected retraces=0, got {row.get('derived')!r}")
@@ -106,6 +116,20 @@ def check(fresh: dict, baseline: dict, tol: float, us_tol: float,
                 failures.append(
                     f"{name}: batched-settle speedup {sp:.2f}x vs baseline "
                     f"{base_sp:.2f}x (-{(1 - sp / base_sp) * 100:.0f}% > "
+                    f"{tol * 100:.0f}% tolerance)")
+
+        if name.startswith("shard_scaling_"):
+            # byte-identity is exact; the sharded/unsharded timing ratio is
+            # gated only relative to the committed same-environment baseline
+            # (1-2-core CI time-slices the virtual devices — see the bench
+            # docstring; real multi-device scaling is a capability number)
+            if "identical_selections=True" not in row.get("derived", ""):
+                failures.append(f"{name}: sharded round no longer identical")
+            base_sc, sc = _field(base_row, "scaling"), _field(row, "scaling")
+            if base_sc and sc and sc < base_sc * (1.0 - tol):
+                failures.append(
+                    f"{name}: sharded scaling {sc:.2f}x vs baseline "
+                    f"{base_sc:.2f}x (-{(1 - sc / base_sc) * 100:.0f}% > "
                     f"{tol * 100:.0f}% tolerance)")
 
         if name.startswith("round_throughput_"):

@@ -177,6 +177,7 @@ def clear_round(
     grid_cache=None,
     clearing=None,
     wis_impl: Optional[str] = None,
+    mesh=None,
 ) -> RoundResult:
     """Clear one batched auction round over ALL announced windows.
 
@@ -203,13 +204,20 @@ def clear_round(
     pass is FUSED behind the scoring dispatch — selection weights are
     gathered from the still-in-flight device scores, no host round-trip.
 
+    ``mesh`` (a ``jax.sharding.Mesh``, e.g. ``launch.mesh.
+    make_auction_mesh()``) shards the pooled-bid axis of the scoring
+    dispatch and the window axis of the device settle across devices via
+    ``shard_map`` — byte-identical to single-device clearing (cross-window
+    conflict resolution stays host-side and global).  Only meaningful with
+    a device ``wis_impl``/``score_impl``; ignored by host paths.
+
     Returns a :class:`RoundResult`; ``results`` aligns with ``windows``.
     """
     windows = list(windows)
     if not windows:
         return RoundResult((), (), (), (), 0.0, 0)
     if wis_impl is not None:
-        selector = make_round_selector(wis_impl)
+        selector = make_round_selector(wis_impl, mesh=mesh)
 
     fit, win_idx, fit_view = assign_bids(windows, variants)
     if not fit:
@@ -221,11 +229,12 @@ def clear_round(
         ages=ages, calibrate=calibrate, impl=score_impl,
         recheck_theta=recheck_theta, per_agent_theta=per_agent_theta,
         grid=grid, grid_cache=grid_cache,
-        view=fit_view,
+        view=fit_view, mesh=mesh,
     )
     backend = clearing if clearing is not None else _default_clearing()
     prefetch = predispatch_settle(
-        selector, backend, len(windows), win_idx, fit_view, handle)
+        selector, backend, len(windows), win_idx, fit_view, handle,
+        ages=ages)
     return settle_round(
         windows, fit, win_idx, handle.result(),
         selector=selector, work_budget=work_budget, view=fit_view,

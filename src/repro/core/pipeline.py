@@ -192,6 +192,7 @@ def pipelined_clear_rounds(
     work_budget=None,
     clearing=None,
     wis_impl: Optional[str] = None,
+    mesh=None,
 ) -> List[RoundResult]:
     """Clear a stream of independent rounds with dispatch/settle overlap.
 
@@ -208,11 +209,13 @@ def pipelined_clear_rounds(
     make_round_selector``); with a device backend ("ref"/"pallas") each
     round's ban-free first WIS pass is dispatched right behind its scoring
     call — score→clear chain on the async stream — so the settle half
-    overlaps the next round's host packing too.
+    overlaps the next round's host packing too.  ``mesh`` shards both
+    device dispatches across an auction mesh (see ``clear_round``);
+    pipelined+sharded rounds stay byte-identical to serial single-device.
     """
     results: List[RoundResult] = []
     pending = None  # (windows, fit, win_idx, view, handle, prefetch)
-    selector = make_round_selector(wis_impl)
+    selector = make_round_selector(wis_impl, mesh=mesh)
     from .clearing import _default_clearing
 
     backend = clearing if clearing is not None else _default_clearing()
@@ -228,10 +231,11 @@ def pipelined_clear_rounds(
                 ages=ages, calibrate=calibrate, impl=score_impl,
                 recheck_theta=recheck_theta, per_agent_theta=per_agent_theta,
                 grid=grid, grid_cache=grid_cache,
-                view=fit_view,
+                view=fit_view, mesh=mesh,
             )
             prefetch = predispatch_settle(
-                selector, backend, len(windows), win_idx, fit_view, handle)
+                selector, backend, len(windows), win_idx, fit_view, handle,
+                ages=ages)
         return windows, fit, win_idx, fit_view, handle, prefetch
 
     def settle(entry):

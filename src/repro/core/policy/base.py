@@ -60,10 +60,23 @@ class ClearingPolicy(abc.ABC):
 
     #: True when ``settle`` accepts the ``prefetch`` kwarg (an in-flight
     #: fused first-pass WIS from ``core.wis.RoundSelector.predispatch``).
-    #: Only meaningful for backends that SELECT on the raw auction scores —
-    #: the prefetch was dispatched against them; backends that transform
-    #: selection scores (FairShare) must leave this False.
+    #: Backends that SELECT on the raw auction scores use the prefetch as
+    #: dispatched; backends that transform selection scores publish the
+    #: transform through :meth:`prefetch_transform` so it is applied
+    #: in-dispatch and the fused first pass matches their selection weights.
     supports_prefetch: bool = False
+
+    def prefetch_transform(self, view, ages):
+        """Per-bid float32 selection-weight multiplier for the fused first
+        pass, or None (identity — select on the raw scores).
+
+        Called at PREDISPATCH time (before scores materialize), so it may
+        only depend on host-known state (``view``, ``ages``).  A backend
+        overriding this must select its first pass on
+        ``float32(score) * float32(transform)`` — quantized exactly like
+        the device gather — for the fused and unfused paths to agree.
+        """
+        return None
 
     @abc.abstractmethod
     def settle(
@@ -356,8 +369,11 @@ def fixed_point_settle(
     * ``packed`` — retained :class:`~repro.core.wis.PackedSettle` buffers
       to dispatch from (RoundSelector only); lets replays share one pack.
     * ``prefetch`` — an in-flight fused first pass dispatched against the
-      round's device scores (``RoundSelector.predispatch``); only honored
-      when selection runs on the raw scores (``select_scores is None``).
+      round's device scores (``RoundSelector.predispatch``); honored when
+      its transform state matches the settle's selection scores — an
+      untransformed prefetch needs ``select_scores is None``, a transformed
+      one (``prefetch.transformed``) needs the matching transformed
+      ``select_scores``.
     """
     windows = list(windows)
     if not fit:
@@ -368,8 +384,10 @@ def fixed_point_settle(
 
     members = (packed.members if packed is not None
                else _pool_members(len(windows), win_idx))
-    if (prefetch is not None and select_scores is None and first_pass is None):
-        first_pass, packed = prefetch.materialize(scores)
+    if (prefetch is not None and first_pass is None
+            and getattr(prefetch, "transformed", False)
+            == (select_scores is not None)):
+        first_pass, packed = prefetch.materialize(sel_scores)
         members = packed.members
     rs = selector if isinstance(selector, RoundSelector) else None
     if rs is not None and packed is None:

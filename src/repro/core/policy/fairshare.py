@@ -46,10 +46,30 @@ class FairShare(ClearingPolicy):
     name = "fair_share"
     age_weight: float = 0.5
     spread: float = 0.25
+    # the age-boost pass SELECTS on scores transformed by a host-known
+    # per-bid multiplier, which the fused first pass applies in-dispatch
+    # (prefetch_transform below) — so FairShare can consume the fused
+    # score→clear path like the raw-score backends
+    supports_prefetch = True
 
     def __post_init__(self):
         if self.age_weight < 0 or self.spread < 0:
             raise ValueError("age_weight and spread must be non-negative")
+
+    def prefetch_transform(self, view, ages):
+        """The age-boost multiplier ``1 + age_weight·A_i(t)``, float32.
+
+        Quantized to float32 because the fused dispatch multiplies it with
+        the float32 device scores; :meth:`settle` builds its selection
+        scores from the SAME float32 product so the fused and host first
+        passes agree bit-for-bit.
+        """
+        ages = ages or {}
+        age = np.asarray(
+            [float(np.clip(ages.get(j, 0.0), 0.0, 1.0)) for j in view.job_ids],
+            np.float64,
+        )
+        return (1.0 + self.age_weight * age).astype(np.float32)
 
     def settle(
         self,
@@ -62,6 +82,7 @@ class FairShare(ClearingPolicy):
         work_budget: Optional[Mapping[str, float]] = None,
         view: Optional[PoolView] = None,
         ages: Optional[Mapping[str, float]] = None,
+        prefetch=None,
     ) -> RoundResult:
         common = dict(selector=selector, work_budget=work_budget, view=view)
         if not fit:
@@ -69,14 +90,14 @@ class FairShare(ClearingPolicy):
         if view is None:
             view = PoolView.build(fit)
             common["view"] = view
-        ages = ages or {}
-        age = np.asarray(
-            [float(np.clip(ages.get(j, 0.0), 0.0, 1.0)) for j in view.job_ids],
-            np.float64,
-        )
-        eff = np.asarray(scores, np.float64) * (1.0 + self.age_weight * age)
+        # float32 score×transform product, upcast: exactly the weights the
+        # fused device dispatch gathers (see prefetch_transform), so the
+        # prefetched first pass and a host sweep select identically
+        transform = self.prefetch_transform(view, ages)
+        eff = (np.asarray(scores, np.float32) * transform).astype(np.float64)
         first = fixed_point_settle(
-            windows, fit, win_idx, scores, select_scores=eff, **common
+            windows, fit, win_idx, scores, select_scores=eff,
+            prefetch=prefetch, **common
         )
         if self.spread <= 0 or not first.selected:
             return first

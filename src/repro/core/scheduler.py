@@ -111,6 +111,14 @@ class SchedulerConfig:
     # knob like score_impl — it changes WHERE clearing runs, never what is
     # selected (parity is gated by tests/test_device_settle.py).
     wis_impl: Optional[str] = None
+    # auction mesh (a jax.sharding.Mesh, e.g. launch.mesh.make_auction_mesh)
+    # sharding the device dispatches of a round — the pooled-bid axis of
+    # scoring and the window axis of the batched settle — via shard_map.
+    # Another WHERE-not-WHAT knob: sharded rounds are byte-identical to
+    # single-device (tests/test_sharded_auction.py).  None = single device;
+    # ignored by host ("numpy"/None) backends.  Mesh is hashable, so the
+    # frozen-dataclass contract holds.
+    mesh: Optional[object] = None
     # re-verify safety condition (a) in-dispatch with this θ against each
     # bid's OWN window capacity (per-variant capacities; heterogeneous
     # slices).  None = off: generation already enforces condition (a).
@@ -330,7 +338,8 @@ class JasdaScheduler:
         # every window of a round in one dispatch (core/wis.py)
         from .wis import make_round_selector
 
-        self._wis_selector = make_round_selector(self.config.wis_impl)
+        self._wis_selector = make_round_selector(self.config.wis_impl,
+                                                 mesh=self.config.mesh)
 
     # -- membership -----------------------------------------------------------
     def add_job(self, agent: JobAgent, now: float) -> None:
@@ -494,6 +503,7 @@ class JasdaScheduler:
                 per_agent_theta=self.policy.per_agent_theta,
                 grid_cache=self._grid_cache,
                 view=prep.view,
+                mesh=self.config.mesh,
             )
             # Step 4a': fused score→clear — with a device wis_impl the
             # ban-free first WIS pass is dispatched right behind the
@@ -504,7 +514,8 @@ class JasdaScheduler:
 
             prep.wis_prefetch = predispatch_settle(
                 self._wis_selector, self.policy.clearing,
-                len(prep.windows), prep.win_idx, prep.view, prep.handle)
+                len(prep.windows), prep.win_idx, prep.view, prep.handle,
+                ages=prep.ages)
 
     # -- settle half: block on scores, clear, commit ---------------------------
     def _settle_round(self, prep: RoundPrep) -> Optional[RoundResult]:

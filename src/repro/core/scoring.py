@@ -306,6 +306,7 @@ def score_round_async(
     per_agent_theta: bool = False,
     grid_cache=None,
     view=None,
+    mesh=None,
 ) -> ScoreHandle:
     """Pack + dispatch one pooled round; return without blocking on scores.
 
@@ -315,6 +316,9 @@ def score_round_async(
     round pipeline overlaps with the next round's host-side work.
     ``view`` (types.PoolView aligned with ``variants``) skips the remaining
     per-variant python walks when the caller already built one.
+    ``mesh`` (``launch.mesh.make_auction_mesh``) shards the pooled bid axis
+    of the device dispatch across devices — byte-identical scores, ignored
+    by the host numpy path.
     """
     m = len(variants)
     if m == 0:
@@ -376,6 +380,7 @@ def score_round_async(
         theta=packed.thetas if recheck else 1.0,
         impl=impl,
         trim=False,
+        mesh=mesh,
     )
     return ScoreHandle(scores, m=m)
 
@@ -394,6 +399,7 @@ def score_round(
     per_agent_theta: bool = False,
     grid_cache=None,
     view=None,
+    mesh=None,
 ) -> np.ndarray:
     """Score a pooled ROUND of bids with ONE batched dispatch (Eq. 4).
 
@@ -424,5 +430,5 @@ def score_round(
         variants, windows, win_idx, policy,
         ages=ages, calibrate=calibrate, impl=impl, grid=grid,
         recheck_theta=recheck_theta, per_agent_theta=per_agent_theta,
-        grid_cache=grid_cache, view=view,
+        grid_cache=grid_cache, view=view, mesh=mesh,
     ).result()

@@ -290,12 +290,21 @@ class SettlePrefetch:
     the fused dispatch is computing; :meth:`materialize` blocks at the host
     boundary and returns (first_pass selections, packed buffers) for the
     fixed-point settle to continue from.
+
+    ``transformed`` records whether the dispatch multiplied the gathered
+    scores by the policy's selection transform
+    (``ClearingPolicy.prefetch_transform``): a transformed prefetch is only
+    valid for a settle that SELECTS on the matching transformed scores, and
+    vice versa — ``fixed_point_settle`` checks the flag before adopting the
+    first pass.
     """
 
-    def __init__(self, packed: PackedSettle, raw_sel, selector: "RoundSelector"):
+    def __init__(self, packed: PackedSettle, raw_sel, selector: "RoundSelector",
+                 transformed: bool = False):
         self.packed = packed
         self._raw = raw_sel
         self.selector = selector
+        self.transformed = transformed
 
     def materialize(self, scores: np.ndarray):
         packed = self.packed
@@ -369,17 +378,22 @@ class RoundSelector:
 
     batched = True
 
-    def __init__(self, impl: str = "numpy"):
+    def __init__(self, impl: str = "numpy", mesh=None):
         if impl not in ("numpy", "ref", "pallas"):
             raise ValueError(
                 f"wis_impl must be one of 'numpy' | 'ref' | 'pallas', got {impl!r}")
         self.impl = impl
+        # auction mesh (launch.mesh.make_auction_mesh): shards the window
+        # rows of every batched dispatch; host backend has nothing to shard
+        self.mesh = mesh if impl in ("ref", "pallas") else None
 
     @property
     def device(self) -> bool:
         return self.impl in ("ref", "pallas")
 
     def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        if self.mesh is not None:
+            return f"RoundSelector({self.impl!r}, mesh={dict(self.mesh.shape)})"
         return f"RoundSelector({self.impl!r})"
 
     def __call__(self, starts, ends, weights):
@@ -529,11 +543,12 @@ class RoundSelector:
             pred = np.concatenate(
                 [pred, np.zeros((rb - r, pred.shape[1]), pred.dtype)])
         sel, _ = wis_ops.wis_settle_batch(
-            w.astype(np.float32), pred, impl=self.impl)
+            w.astype(np.float32), pred, impl=self.impl, mesh=self.mesh)
         return np.asarray(sel)[:r]
 
     # -- fused score→clear dispatch (device backends only) ---------------------
-    def predispatch(self, n_windows: int, win_idx, view, handle) -> Optional["SettlePrefetch"]:
+    def predispatch(self, n_windows: int, win_idx, view, handle,
+                    transform=None) -> Optional["SettlePrefetch"]:
         """Dispatch the ban-free first-pass WIS against IN-FLIGHT scores.
 
         Called right after ``score_round_async`` while the scoring dispatch
@@ -542,6 +557,11 @@ class RoundSelector:
         clearing without a host round-trip, and the whole score→clear chain
         overlaps the next round's host preparation.  Host-only backends
         return None (nothing to fuse).
+
+        ``transform`` (optional (M,) float32, aligned with the pool) is the
+        clearing policy's selection-weight multiplier — gathered scores are
+        multiplied in-dispatch, which is what lets score-transforming
+        backends (FairShare's age boost) consume the fused path.
         """
         if not self.device:
             return None
@@ -559,43 +579,57 @@ class RoundSelector:
                 [pred, np.zeros((rb - n_windows, packed.lanes), pred.dtype)])
         from ..kernels.wis_dp import ops as wis_ops
 
+        tr = None
+        if transform is not None:
+            # pad to the bucket-padded device scores (padded rows are
+            # masked lanes; 1.0 keeps the gather shape-stable)
+            tr = np.ones(int(handle.device_scores.shape[0]), np.float32)
+            tr[: len(transform)] = np.asarray(transform, np.float32)
         sel, _ = wis_ops.wis_settle_fused(
             handle.device_scores, idx.astype(np.int32), idx >= 0, pred,
-            impl=self.impl)
-        return SettlePrefetch(packed, sel, self)
+            impl=self.impl, mesh=self.mesh, transform=tr)
+        return SettlePrefetch(packed, sel, self,
+                              transformed=transform is not None)
 
 
 def predispatch_settle(selector, backend, n_windows: int, win_idx, view,
-                       handle) -> Optional[SettlePrefetch]:
+                       handle, ages=None) -> Optional[SettlePrefetch]:
     """Dispatch the fused first-pass WIS iff every fusion condition holds.
 
     The ONE eligibility rule shared by every entry point (clear_round, the
     pipelined round stream, the scheduler's prepare half): the selector is
     a device-backed RoundSelector, the scoring dispatch is still in flight,
-    and the clearing backend selects on the raw scores the prefetch was
-    computed against (``supports_prefetch``).  Returns None when any
-    condition fails — callers settle without fusion, identically.
+    and the clearing backend declares ``supports_prefetch``.  Backends that
+    SELECT on transformed scores publish the transform through
+    ``prefetch_transform(view, ages)`` (None = identity) and it is applied
+    in-dispatch, so the fused first pass matches their selection weights.
+    Returns None when any condition fails — callers settle without fusion,
+    identically.
     """
     if (isinstance(selector, RoundSelector) and selector.device
             and handle is not None and handle.in_flight
             and getattr(backend, "supports_prefetch", False)):
-        return selector.predispatch(n_windows, win_idx, view, handle)
+        get_tr = getattr(backend, "prefetch_transform", None)
+        transform = get_tr(view, ages) if get_tr is not None else None
+        return selector.predispatch(n_windows, win_idx, view, handle,
+                                    transform=transform)
     return None
 
 
-def make_round_selector(impl: Optional[str]):
-    """Map the ``wis_impl`` knob to a selector.
+def make_round_selector(impl: Optional[str], mesh=None):
+    """Map the ``wis_impl`` knob (plus an optional auction mesh) to a selector.
 
     None → the historical per-window :func:`wis_select` host loop (the
     default: byte-identical, no device involvement); "numpy" → the batched
     float64 host backend (byte-identical by construction, one python DP
     loop per LANE instead of per candidate per window); "ref" / "pallas" →
     the device backends in ``kernels/wis_dp`` (float32 DP, fused score→
-    clear dispatch).
+    clear dispatch).  ``mesh`` shards the device backends' window rows
+    (``launch.mesh.make_auction_mesh``); host paths ignore it.
     """
     if impl is None:
         return wis_select
-    return RoundSelector(impl)
+    return RoundSelector(impl, mesh=mesh)
 
 
 def wis_select_batch(starts, ends, weights, valid=None, *, impl: str = "numpy"):

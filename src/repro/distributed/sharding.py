@@ -29,7 +29,8 @@ from typing import Optional, Tuple
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
 
-__all__ = ["ShardingRules", "resolve_param_specs", "named_sharding_tree"]
+__all__ = ["ShardingRules", "resolve_param_specs", "named_sharding_tree",
+           "mesh_size", "auction_row_spec", "replicated_spec", "spec_sharded"]
 
 
 @dataclass(frozen=True)
@@ -134,6 +135,44 @@ def guard_spec(spec: PS, shape, mesh_shape: dict) -> PS:
             size *= mesh_shape[a]
         cleaned.append(entry if dim % size == 0 else None)
     return PS(*cleaned)
+
+
+# ---------------------------------------------------------------------------
+# Auction-round sharding (launch.mesh.make_auction_mesh consumers)
+# ---------------------------------------------------------------------------
+
+
+def mesh_size(mesh: Optional[Mesh]) -> int:
+    """Total device count of a mesh (1 for None — the unsharded case)."""
+    if mesh is None:
+        return 1
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n
+
+
+def auction_row_spec(mesh: Mesh, dim: int) -> PS:
+    """Row-sharding spec for a leading auction dim (pooled bids / windows).
+
+    Shards dim 0 over EVERY mesh axis, guarded by :func:`guard_spec`: when
+    the mesh extent does not divide ``dim`` the entry is dropped and the
+    spec degrades to replicated — the caller then takes the unsharded
+    dispatch path instead of tripping GSPMD padding.  Bucketed round shapes
+    (pow2 ≥ 256 bids, pow2 ≥ 8 windows) always divide a pow2 auction mesh,
+    so in practice the guard only fires on hand-built odd meshes.
+    """
+    return guard_spec(PS(tuple(mesh.axis_names)), (dim,), dict(mesh.shape))
+
+
+def replicated_spec() -> PS:
+    """The replicated (no-partition) spec for broadcast operands."""
+    return PS()
+
+
+def spec_sharded(spec: PS) -> bool:
+    """True when the spec actually partitions something."""
+    return any(entry is not None for entry in tuple(spec))
 
 
 def resolve_param_specs(logical_tree, rules: ShardingRules):

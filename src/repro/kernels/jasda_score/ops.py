@@ -95,6 +95,62 @@ def _score_ref_jit(feat_job, feat_sys, alphas, betas, mu, sigma, lam, capacity, 
     )
 
 
+# ---------------------------------------------------------------------------
+# Mesh-sharded dispatch: partition the pooled bid axis over an auction mesh
+# ---------------------------------------------------------------------------
+
+# (mesh, impl, block_m, interpret) -> jitted shard_map wrapper.  One cached
+# executable per mesh shape (Mesh hashes by devices + axis names), so the
+# zero-recompile contract survives sharding: the jit cache inside each
+# wrapper is still keyed by bucketed shapes only, and drifting pool sizes
+# under one mesh never retrace.
+_SHARDED_SCORE_CACHE: dict = {}
+
+
+def _sharded_score_fn(mesh, impl: str, block_m: int, interpret: bool):
+    key = (mesh, impl, block_m, interpret)
+    fn = _SHARDED_SCORE_CACHE.get(key)
+    if fn is not None:
+        return fn
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as PS
+
+    row = PS(tuple(mesh.axis_names))
+    rep = PS()
+    if impl == "ref":
+        def body(fj, fs, alphas, betas, mu, sg, lam, cap, th):
+            return score_variants_reference(
+                fj, fs, alphas, betas, mu, sg, lam=lam, capacity=cap, theta=th)
+        out_specs = (row, row, row)
+    else:
+        def body(fj, fs, alphas, betas, mu, sg, lam, cap, th):
+            score, elig = score_variants_pallas(
+                fj, fs, alphas, betas, mu, sg, lam=lam, capacity=cap,
+                theta=th, block_m=block_m, interpret=interpret)
+            return score, elig
+        out_specs = (row, row)
+    # check_rep=False: pallas_call has no replication rule, and scoring is
+    # row-independent anyway (no cross-shard collectives in the body)
+    sharded = shard_map(
+        body, mesh=mesh,
+        in_specs=(row, row, rep, rep, row, row, row, row, row),
+        out_specs=out_specs, check_rep=False)
+
+    @jax.jit
+    def call(fj, fs, alphas, betas, mu, sg, lam, cap, th):
+        # the python body runs only on a jit cache miss — same retrace
+        # accounting as the unsharded wrappers.  The pallas path needs no
+        # explicit bump: score_variants_pallas is itself jitted and its
+        # body (which increments the pallas counter) runs exactly when
+        # this wrapper traces.
+        if impl == "ref":
+            TRACE_COUNT["ref"] += 1
+        return sharded(fj, fs, alphas, betas, mu, sg, lam, cap, th)
+
+    _SHARDED_SCORE_CACHE[key] = call
+    return call
+
+
 def score_variants(
     feat_job,
     feat_sys,
@@ -110,6 +166,7 @@ def score_variants(
     block_m: int = 256,
     bucket: bool = True,
     trim: bool = True,
+    mesh=None,
 ):
     """Batched scoring dispatch: Pallas on TPU, jnp reference elsewhere.
 
@@ -125,6 +182,14 @@ def score_variants(
     rows score 0/ineligible by construction) — callers that chain further
     device work on the in-flight scores (the fused settle dispatch) need
     the shape-stable padded form to stay retrace-free.
+
+    ``mesh`` (a 1-axis auction mesh from ``launch.mesh.make_auction_mesh``)
+    shards the padded pool axis across devices via ``shard_map``.  Scoring
+    is row-independent, so the sharded dispatch is byte-identical to the
+    single-device one; M-bucketing stays GLOBAL (pad first, then shard), so
+    the jit cache is one executable per bucket per mesh shape.  Meshes that
+    cannot evenly divide the bucket (or with a single device) fall back to
+    the unsharded dispatch silently.
     """
     feat_job = np.asarray(feat_job, np.float32)
     feat_sys = np.asarray(feat_sys, np.float32)
@@ -149,18 +214,35 @@ def score_variants(
     th_v = _per_variant_np(theta, m, 0.0, m_pad)
 
     end = m if trim else m_pad
+    n_shards = 1
+    if mesh is not None:
+        from ...distributed.sharding import auction_row_spec, mesh_size, spec_sharded
+
+        n_shards = mesh_size(mesh)
+        if n_shards <= 1 or not spec_sharded(auction_row_spec(mesh, m_pad)):
+            n_shards = 1  # degenerate / non-dividing mesh: unsharded path
+
     if impl == "ref":
-        score, elig, p_exceed = _score_ref_jit(
-            fj, fs, alphas, betas, mu_p, sg_p, lam_v, cap_v, th_v
-        )
+        if n_shards > 1:
+            score, elig, p_exceed = _sharded_score_fn(mesh, "ref", 0, False)(
+                fj, fs, alphas, betas, mu_p, sg_p, lam_v, cap_v, th_v)
+        else:
+            score, elig, p_exceed = _score_ref_jit(
+                fj, fs, alphas, betas, mu_p, sg_p, lam_v, cap_v, th_v
+            )
         return score[:end], elig[:end], p_exceed[:end]
 
-    bm = min(block_m, max(8, m_pad))
-    score, elig = score_variants_pallas(
-        fj, fs, alphas, betas, mu_p, sg_p,
-        lam=lam_v, capacity=cap_v, theta=th_v,
-        block_m=bm, interpret=use_interpret(),
-    )
+    # per-SHARD row extent bounds the pallas block size under sharding
+    bm = min(block_m, max(8, m_pad // n_shards))
+    if n_shards > 1:
+        score, elig = _sharded_score_fn(mesh, "pallas", bm, use_interpret())(
+            fj, fs, alphas, betas, mu_p, sg_p, lam_v, cap_v, th_v)
+    else:
+        score, elig = score_variants_pallas(
+            fj, fs, alphas, betas, mu_p, sg_p,
+            lam=lam_v, capacity=cap_v, theta=th_v,
+            block_m=bm, interpret=use_interpret(),
+        )
     # kernel does not return p_exceed; recompute lazily only if needed
     return score[:end], elig[:end], None
 

@@ -59,38 +59,156 @@ def _settle_pallas_jit(weights, pred, interpret):
     return wis_batch_pallas(weights, pred, interpret=interpret)
 
 
+def _fused_weights(scores, idx, mask, transform):
+    """Gather selection weights from in-flight scores, one shared recipe.
+
+    ``transform`` (same length as ``scores``, or None) is a per-pool-index
+    selection-weight multiplier — the policy's score transform (FairShare's
+    age boost) quantized to float32, applied IN-DISPATCH so transforming
+    backends can consume the fused first pass too.  The product of two
+    float32 operands rounded to float32 matches the host path's quantized
+    transform by construction.
+    """
+    safe = jnp.clip(idx, 0, scores.shape[0] - 1)
+    w = scores[safe].astype(jnp.float32)
+    if transform is not None:
+        w = w * transform[safe].astype(jnp.float32)
+    return jnp.where(mask, w, 0.0)
+
+
 @jax.jit
 def _settle_ref_fused_jit(scores, idx, mask, pred):
     TRACE_COUNT["settle_ref"] += 1
-    w = jnp.where(mask, scores[jnp.clip(idx, 0, scores.shape[0] - 1)], 0.0)
-    return wis_batch_reference(w.astype(jnp.float32), pred)
+    return wis_batch_reference(_fused_weights(scores, idx, mask, None), pred)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def _settle_pallas_fused_jit(scores, idx, mask, pred, interpret):
     TRACE_COUNT["settle_pallas"] += 1
-    w = jnp.where(mask, scores[jnp.clip(idx, 0, scores.shape[0] - 1)], 0.0)
-    return wis_batch_pallas(w.astype(jnp.float32), pred, interpret=interpret)
+    return wis_batch_pallas(_fused_weights(scores, idx, mask, None), pred,
+                            interpret=interpret)
 
 
-def wis_settle_batch(weights, pred, *, impl: Optional[str] = None):
+@jax.jit
+def _settle_ref_fused_tr_jit(scores, transform, idx, mask, pred):
+    TRACE_COUNT["settle_ref"] += 1
+    return wis_batch_reference(
+        _fused_weights(scores, idx, mask, transform), pred)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _settle_pallas_fused_tr_jit(scores, transform, idx, mask, pred, interpret):
+    TRACE_COUNT["settle_pallas"] += 1
+    return wis_batch_pallas(
+        _fused_weights(scores, idx, mask, transform), pred,
+        interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Mesh-sharded settle: partition the window (row) axis over an auction mesh
+# ---------------------------------------------------------------------------
+
+# (mesh, impl, interpret, fused, transformed) -> jitted shard_map wrapper;
+# one executable per mesh shape, keeping the zero-retrace contract (the
+# inner jit cache stays keyed on bucketed (W, L) shapes only).
+_SHARDED_SETTLE_CACHE: dict = {}
+
+
+def _sharded_settle_fn(mesh, impl: str, interpret: bool, fused: bool,
+                       transformed: bool):
+    key = (mesh, impl, interpret, fused, transformed)
+    fn = _SHARDED_SETTLE_CACHE.get(key)
+    if fn is not None:
+        return fn
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as PS
+
+    row = PS(tuple(mesh.axis_names))
+    rep = PS()
+    kernel = wis_batch_reference if impl == "ref" else \
+        functools.partial(wis_batch_pallas, interpret=interpret)
+
+    if fused:
+        # scores (and transform) stay REPLICATED: lanes of any window may
+        # index any pool row, so the gather needs the whole scores array —
+        # this all-gather of the (M_pad,) score vector is the only
+        # cross-shard exchange on the device side of a round
+        def body(scores, transform, idx, mask, pred):
+            return kernel(_fused_weights(scores, idx, mask, transform), pred)
+
+        if transformed:
+            sharded = shard_map(
+                body, mesh=mesh,
+                in_specs=(rep, rep, row, row, row),
+                out_specs=(row, row), check_rep=False)
+
+            @jax.jit
+            def call(scores, transform, idx, mask, pred):
+                TRACE_COUNT["settle_ref" if impl == "ref" else "settle_pallas"] += 1
+                return sharded(scores, transform, idx, mask, pred)
+        else:
+            sharded = shard_map(
+                lambda scores, idx, mask, pred: body(scores, None, idx, mask, pred),
+                mesh=mesh, in_specs=(rep, row, row, row),
+                out_specs=(row, row), check_rep=False)
+
+            @jax.jit
+            def call(scores, idx, mask, pred):
+                TRACE_COUNT["settle_ref" if impl == "ref" else "settle_pallas"] += 1
+                return sharded(scores, idx, mask, pred)
+    else:
+        sharded = shard_map(
+            kernel, mesh=mesh, in_specs=(row, row),
+            out_specs=(row, row), check_rep=False)
+
+        @jax.jit
+        def call(weights, pred):
+            TRACE_COUNT["settle_ref" if impl == "ref" else "settle_pallas"] += 1
+            return sharded(weights, pred)
+
+    _SHARDED_SETTLE_CACHE[key] = call
+    return call
+
+
+def _settle_shards(mesh, rows: int) -> int:
+    """Shard count for a (rows, L) settle under ``mesh`` (1 = unsharded)."""
+    if mesh is None:
+        return 1
+    from ...distributed.sharding import auction_row_spec, mesh_size, spec_sharded
+
+    n = mesh_size(mesh)
+    if n <= 1 or not spec_sharded(auction_row_spec(mesh, rows)):
+        return 1
+    return n
+
+
+def wis_settle_batch(weights, pred, *, impl: Optional[str] = None, mesh=None):
     """Batched multi-window WIS: (W, L) sorted weights/pred → (sel, totals).
 
     Rows are windows, lanes candidates sorted ascending by end time (the
     host pack in core/wis.py produces the layout); padded / banned lanes
     carry weight 0 and are provably never selected under the strict ``>``
     tie rule.  Returns jax arrays (left in flight — np.asarray to block).
+
+    ``mesh`` shards the window (row) axis via ``shard_map``: each shard
+    clears its rows independently (the per-row DP never crosses rows), so
+    the sharded dispatch is byte-identical to the single-device one.
+    Non-dividing or single-device meshes fall back to unsharded.
     """
     weights = jnp.asarray(weights, jnp.float32)
     pred = jnp.asarray(pred, jnp.int32)
     if impl is None:
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if _settle_shards(mesh, weights.shape[0]) > 1:
+        return _sharded_settle_fn(mesh, impl, use_interpret(), False, False)(
+            weights, pred)
     if impl == "ref":
         return _settle_ref_jit(weights, pred)
     return _settle_pallas_jit(weights, pred, use_interpret())
 
 
-def wis_settle_fused(scores, idx, mask, pred, *, impl: Optional[str] = None):
+def wis_settle_fused(scores, idx, mask, pred, *, impl: Optional[str] = None,
+                     mesh=None, transform=None):
     """Fused score→clear dispatch: gather weights from IN-FLIGHT scores.
 
     ``scores`` is the (M_pad,) device array of a ``jasda_score`` round
@@ -99,6 +217,13 @@ def wis_settle_fused(scores, idx, mask, pred, *, impl: Optional[str] = None):
     counts).  The gather chains on the scoring computation on the async
     stream, so the round's selection never waits on a device→host→device
     round-trip.  Returns the in-flight (sel, totals) pair.
+
+    ``transform`` (optional (M_pad,) float32) multiplies each gathered
+    score in-dispatch — the clearing policy's selection transform
+    (``ClearingPolicy.prefetch_transform``), which is what lets
+    score-transforming backends (FairShare) ride the fused path.  ``mesh``
+    shards the window rows; scores/transform stay replicated (any lane may
+    gather any pool row).
     """
     scores = jnp.asarray(scores)
     idx = jnp.asarray(idx, jnp.int32)
@@ -106,6 +231,19 @@ def wis_settle_fused(scores, idx, mask, pred, *, impl: Optional[str] = None):
     pred = jnp.asarray(pred, jnp.int32)
     if impl is None:
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if transform is not None:
+        transform = jnp.asarray(transform, jnp.float32)
+    if _settle_shards(mesh, idx.shape[0]) > 1:
+        fn = _sharded_settle_fn(mesh, impl, use_interpret(), True,
+                                transform is not None)
+        if transform is not None:
+            return fn(scores, transform, idx, mask, pred)
+        return fn(scores, idx, mask, pred)
+    if transform is not None:
+        if impl == "ref":
+            return _settle_ref_fused_tr_jit(scores, transform, idx, mask, pred)
+        return _settle_pallas_fused_tr_jit(scores, transform, idx, mask, pred,
+                                           use_interpret())
     if impl == "ref":
         return _settle_ref_fused_jit(scores, idx, mask, pred)
     return _settle_pallas_fused_jit(scores, idx, mask, pred, use_interpret())

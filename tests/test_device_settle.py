@@ -351,12 +351,78 @@ def test_fused_settle_matches_host_and_never_retraces():
     assert sum(delta.values()) == 0, f"batched settle retraced: {delta}"
 
 
-def test_prefetch_ignored_by_score_transforming_backend():
-    """FairShare transforms selection scores — it must never consume the
-    raw-score prefetch (supports_prefetch stays False)."""
+def test_transforming_backend_rides_fused_path():
+    """FairShare transforms selection scores — since PR 6 the transform is
+    threaded into the fused dispatch (``prefetch_transform``), so it DOES
+    consume the prefetch, and a transformed prefetch is never handed to a
+    raw-score first pass (nor vice versa)."""
     assert GreedyWIS.supports_prefetch
     assert GlobalAssignment.supports_prefetch
-    assert not FairShare.supports_prefetch
+    assert FairShare.supports_prefetch
+    # transform quantization contract: float32, 1 + age_weight·age
+    from repro.core.types import PoolView
+
+    view = PoolView.build(_stream_rounds(np.random.default_rng(0),
+                                         [(12, 2)])[0][1])
+    tr = FairShare(age_weight=0.5).prefetch_transform(
+        view, {j: 0.6 for j in view.job_ids})
+    assert tr.dtype == np.float32
+    np.testing.assert_allclose(tr, np.float32(1.3))
+    assert GreedyWIS().prefetch_transform(view, {}) is None
+
+
+def test_transformed_prefetch_gating():
+    """A transformed prefetch must only seed a transformed first pass:
+    FairShare consumes its own prefetch; a raw prefetch handed to FairShare
+    (or a transformed one to GreedyWIS) is recomputed, not honored."""
+    from repro.core import wis as wis_mod
+    from repro.core.wis import predispatch_settle
+
+    rng = np.random.default_rng(13)
+    # pool above SMALL_POOL_M so scoring dispatches on device (prefetchable)
+    windows, pool = _stream_rounds(rng, [(420, 4)])[0]
+    policy = ScoringPolicy()
+    ages = {f"J{i}": (i % 5) / 4.0 for i in range(16)}
+    calls = []
+    orig = wis_mod.SettlePrefetch.materialize
+
+    def spy(self, scores):
+        calls.append(self.transformed)
+        return orig(self, scores)
+
+    try:
+        wis_mod.SettlePrefetch.materialize = spy
+        rr = clear_round(windows, pool, policy, ages=ages, wis_impl="ref",
+                         clearing=FairShare())
+        assert calls == [True]
+        calls.clear()
+        # cross-wired: transformed prefetch into a raw-score settle is
+        # silently ignored (fixed_point_settle recomputes), still identical
+        fit, win_idx, view = assign_bids(windows, pool)
+        from repro.core.scoring import score_round_async
+        selector = make_round_selector("ref")
+        handle = score_round_async(fit, windows, win_idx, policy, ages=ages,
+                                   view=view)
+        wrong = predispatch_settle(selector, FairShare(), len(windows),
+                                   win_idx, view, handle, ages=ages)
+        base = settle_round(windows, fit, win_idx, handle.result(),
+                            selector=selector, view=view, clearing=GreedyWIS())
+        crossed = settle_round(windows, fit, win_idx, handle.result(),
+                               selector=selector, view=view,
+                               clearing=GreedyWIS(), prefetch=wrong)
+        assert not calls  # transformed prefetch never materialized raw
+        assert ([tuple(v.variant_id for v in r.selected) for r in base.results]
+                == [tuple(v.variant_id for v in r.selected)
+                    for r in crossed.results])
+    finally:
+        wis_mod.SettlePrefetch.materialize = orig
+    # the honored FairShare round equals the host path byte-for-byte
+    host = clear_round(windows, pool, policy, ages=ages,
+                       clearing=FairShare())
+    assert ([tuple(v.variant_id for v in r.selected) for r in rr.results]
+            == [tuple(v.variant_id for v in r.selected)
+                for r in host.results])
+    assert rr.total_score == host.total_score
 
 
 def test_custom_backend_signature_unchanged():
