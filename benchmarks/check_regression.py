@@ -75,7 +75,7 @@ import sys
 
 GATED_PREFIXES = ("round_throughput_", "score_dispatch_", "pipeline_overlap_",
                   "policy_clearing_", "adaptive_bidding_", "settle_throughput_",
-                  "shard_scaling_")
+                  "shard_scaling_", "fault_recovery_")
 
 
 def _load(path: str) -> dict:
@@ -166,6 +166,23 @@ def check(fresh: dict, baseline: dict, tol: float, us_tol: float,
                         f"{name}: {label} {ov:.2f}x vs baseline "
                         f"{base_ov:.2f}x (+{(ov / base_ov - 1) * 100:.0f}% > "
                         f"{tol * 100:.0f}% tolerance)")
+
+        if name.startswith("fault_recovery_"):
+            # crash-replay byte-identity is exact; goodput retained under
+            # the fixed seeded fault plan is gated relative to baseline
+            if ("crash_identical=" in base_row.get("derived", "")
+                    and "crash_identical=True" not in row.get("derived", "")):
+                failures.append(
+                    f"{name}: crash-at-round-k replay no longer byte-"
+                    f"identical to the uninterrupted run: "
+                    f"{row.get('derived')!r}")
+            base_gr, gr = (_field(base_row, "goodput_retained"),
+                           _field(row, "goodput_retained"))
+            if base_gr and gr is not None and gr < base_gr * (1.0 - tol):
+                failures.append(
+                    f"{name}: goodput retained under faults {gr:.3f} vs "
+                    f"baseline {base_gr:.3f} (-{(1 - gr / base_gr) * 100:.0f}%"
+                    f" > {tol * 100:.0f}% tolerance)")
 
         if name.startswith("adaptive_bidding_"):
             if "adaptive_ok=True" not in row.get("derived", ""):

@@ -210,6 +210,72 @@ def bench_atomization_ft():
                  f"finished={res.n_finished}/{res.n_jobs}")
 
 
+def bench_fault_recovery():
+    """Robustness layer: goodput retained under a seeded FaultPlan (slice
+    revocations + silent/erroring bidders) vs the fault-free run, and crash
+    -at-round-k checkpoint recovery replaying byte-identically.  Gated by
+    check_regression.py (``fault_recovery_`` prefix)."""
+    import tempfile
+
+    from repro.checkpoint import CheckpointStore
+    from repro.core import (FaultEvent, FaultPlan, JasdaScheduler, SimConfig,
+                            simulate)
+    from repro.core.faults import SCHEDULER_CRASH
+
+    n, t_end = (60, 1500.0) if QUICK else (160, 4000.0)
+    slices = _hetero_slices()
+    plan = FaultPlan.generate(
+        17, t_end=t_end,
+        slice_ids=[s.slice_id for s in slices],
+        job_ids=[f"J{i:03d}" for i in range(n)],
+        revoke_rate=0.0015, silent_rate=0.001, error_rate=0.001,
+        repair_time=60.0, fault_duration=25.0)
+    cfg = SimConfig(t_end=t_end, seed=2)
+
+    t0 = time.perf_counter()
+    base = simulate(JasdaScheduler(_hetero_slices()), _workload(n, seed=3), cfg)
+    faulted = simulate(JasdaScheduler(_hetero_slices()), _workload(n, seed=3),
+                       cfg, faults=plan)
+    wall = (time.perf_counter() - t0) * 1e6
+
+    # goodput = completed useful work per unit makespan (committed score
+    # would double-count revoked-then-recleared work)
+    def goodput(r):
+        done = sum(r.scheduler.agents[j].spec.total_work for j in r.jct_per_job)
+        return done / max(r.makespan, 1e-9)
+
+    retained = goodput(faulted) / max(goodput(base), 1e-9)
+    lost = sum(1 for row in faulted.scheduler.commit_log
+               if row.status == "lost")
+    emit("fault_recovery_goodput", wall,
+         f"goodput_retained={retained:.3f} lost_commitments={lost} "
+         f"finished={faulted.n_finished}/{faulted.n_jobs} "
+         f"vs_faultfree={base.n_finished}/{base.n_jobs}")
+
+    crash_plan = FaultPlan(seed=17, events=plan.events + (
+        FaultEvent(t=t_end / 3 + 0.5, kind=SCHEDULER_CRASH),))
+    t0 = time.perf_counter()
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        r_ref = simulate(JasdaScheduler(_hetero_slices()),
+                         _workload(n, seed=3), cfg, faults=plan,
+                         checkpoint=CheckpointStore(d1), checkpoint_every=25)
+        r_crash = simulate(JasdaScheduler(_hetero_slices()),
+                           _workload(n, seed=3), cfg, faults=crash_plan,
+                           checkpoint=CheckpointStore(d2), checkpoint_every=25)
+    wall = (time.perf_counter() - t0) * 1e6
+    identical = (r_crash.jct_per_job == r_ref.jct_per_job
+                 and r_crash.calibration == r_ref.calibration
+                 and r_crash.total_score == r_ref.total_score
+                 and [(row.status, row.job_id, row.slice_id, row.score)
+                      for row in r_crash.scheduler.commit_log]
+                 == [(row.status, row.job_id, row.slice_id, row.score)
+                     for row in r_ref.scheduler.commit_log])
+    emit("fault_recovery_crash_replay", wall,
+         f"crash_identical={identical} "
+         f"n_committed={r_crash.n_committed}/{r_ref.n_committed}")
+
+
 # ---------------------------------------------------------------------------
 # §4.2.1 calibration
 # ---------------------------------------------------------------------------
@@ -1048,6 +1114,7 @@ BENCHES: Dict[str, Callable] = {
     "age_fairness": bench_age_fairness,
     "window_policies": bench_window_policies,
     "atomization_ft": bench_atomization_ft,
+    "fault_recovery": bench_fault_recovery,
     "round_throughput": bench_round_throughput,
     "policy_clearing": bench_policy_clearing,
     "adaptive_bidding": bench_adaptive_bidding,
@@ -1061,7 +1128,8 @@ BENCHES: Dict[str, Callable] = {
 # CI smoke subset: fast, no multi-minute simulator sweeps
 QUICK_BENCHES = ("table3_clearing", "round_throughput", "policy_clearing",
                  "adaptive_bidding", "settle_throughput", "score_dispatch",
-                 "pipeline_overlap", "shard_scaling", "kernels")
+                 "pipeline_overlap", "shard_scaling", "kernels",
+                 "fault_recovery")
 
 
 def main() -> None:

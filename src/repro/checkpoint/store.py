@@ -85,6 +85,64 @@ class CheckpointStore:
             self._thread = threading.Thread(target=write, daemon=True)
             self._thread.start()
 
+    def save_state(self, step: int, state: Any, *, blocking: bool = True) -> None:
+        """Checkpoint an arbitrary picklable OBJECT graph (scheduler state).
+
+        The array path (:meth:`save`) flattens a jax tree; scheduler crash
+        recovery instead needs one pickled graph so shared object
+        IDENTITIES (the same Variant held by a commitment, the running
+        set, and the commit index) survive the round-trip.  Same
+        atomicity: written to ``step_<N>.tmp`` and renamed into place, so
+        a crash mid-write never leaves a half checkpoint visible;
+        ``latest`` and GC are shared with the array path.
+        """
+        import pickle
+
+        self.wait()
+        blob = pickle.dumps(state, protocol=pickle.HIGHEST_PROTOCOL)
+
+        def write():
+            tmp = os.path.join(self.dir, f"step_{step}.tmp")
+            final = os.path.join(self.dir, f"step_{step}")
+            os.makedirs(tmp, exist_ok=True)
+            with open(os.path.join(tmp, "state.pkl"), "wb") as f:
+                f.write(blob)
+            manifest = {"step": step, "kind": "pickle",
+                        "n_bytes": len(blob)}
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)  # atomic commit
+            with open(os.path.join(self.dir, "latest.tmp"), "w") as f:
+                f.write(str(step))
+            os.replace(os.path.join(self.dir, "latest.tmp"),
+                       os.path.join(self.dir, "latest"))
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def restore_state(self, step: Optional[int] = None) -> Tuple[Any, int]:
+        """Load a :meth:`save_state` checkpoint (latest when ``step`` None)."""
+        import pickle
+
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        final = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(final, "manifest.json")) as f:
+            manifest = json.load(f)
+        if manifest.get("kind") != "pickle":
+            raise ValueError(
+                f"step {step} is an array checkpoint; use restore()")
+        with open(os.path.join(final, "state.pkl"), "rb") as f:
+            return pickle.load(f), step
+
     def wait(self) -> None:
         if self._thread is not None:
             self._thread.join()

@@ -13,6 +13,7 @@ Layer map (paper section → module):
                                   BiddingStrategy backends, RoundFeedback)
   §3/§4 interaction cycle       → scheduler
   §6(a) quantitative study      → simulator, baselines
+  fault injection + recovery    → faults (beyond-paper robustness layer)
 """
 from .types import (  # noqa: F401
     DEAD_WINDOW_EPS,
@@ -79,6 +80,15 @@ from .negotiation import (  # noqa: F401
     RoundFeedback,
     WindowAnnouncement,
     build_feedback,
+)
+from .faults import (  # noqa: F401
+    FAULT_KINDS,
+    AgentFault,
+    AgentRespondError,
+    AgentSilentError,
+    FaultEvent,
+    FaultInjector,
+    FaultPlan,
 )
 from .jobs import AgentConfig, JobAgent  # noqa: F401
 from .clearing import assign_bids, clear_round, clear_window, settle_round  # noqa: F401

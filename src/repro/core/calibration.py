@@ -188,12 +188,14 @@ class Calibrator:
         """
         return {
             j: {
-                "rho": st.rho,
-                "hist_avg": st.hist_avg,
-                "n_verified": st.n_verified,
+                "rho": float(st.rho),
+                "hist_avg": float(st.hist_avg),
+                "n_verified": int(st.n_verified),
                 "mean_error": st.mean_error(),
-                "bias": st.bias,
-                "errors": list(st.errors),
+                "bias": float(st.bias),
+                # plain floats, IN VERIFICATION ORDER: the windowed
+                # E_v[ε] → ρ update reads the tail, so order is state
+                "errors": [float(e) for e in st.errors],
             }
             for j, st in self._jobs.items()
         }
@@ -204,12 +206,15 @@ class Calibrator:
         Tolerates snapshots taken before the ``bias``/``errors`` fields
         existed (missing keys restore to their neutral defaults; ρ then
         evolves from the restored value as new verifications arrive).
+        The error history restores in its original verification order even
+        for jobs that never re-bid after the restore — a re-snapshot must
+        be exactly the snapshot that was restored (pinned by tests).
         """
         self._jobs = {
             j: _JobCal(
                 hist_avg=float(row["hist_avg"]),
                 n_verified=int(row.get("n_verified", 0)),
-                errors=list(row.get("errors", ())),
+                errors=[float(e) for e in row.get("errors", ())],
                 rho=float(row["rho"]),
                 bias=float(row.get("bias", 0.0)),
             )

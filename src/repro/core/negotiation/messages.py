@@ -45,6 +45,10 @@ __all__ = [
     "LossReport",
     "RoundFeedback",
     "build_feedback",
+    "LOSS_OUTSCORED",
+    "LOSS_WINDOW_EMPTY",
+    "LOSS_SELF_CONFLICT",
+    "LOSS_SLICE_FAILED",
 ]
 
 
@@ -103,6 +107,12 @@ LOSS_WINDOW_EMPTY = "window_empty"  # the whole window cleared empty (→ dead)
 # conflict resolution.  NOT a market defeat — adaptive strategies must not
 # react to it the way they react to being outscored.
 LOSS_SELF_CONFLICT = "self_conflict"
+# the slice backing an ALREADY-WON commitment died before execution: the
+# win is revoked, the work re-enters the job's biddable pool, and the
+# scheduler broadcasts this reason out-of-round (scheduler.revoke_slice).
+# Like self_conflict it is NOT a market defeat — the bid price was fine;
+# adaptive strategies should re-bid, not shade.
+LOSS_SLICE_FAILED = "slice_failed"
 
 
 @dataclass(frozen=True)

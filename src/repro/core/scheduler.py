@@ -61,11 +61,14 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from ..runtime.monitor import retry_with_backoff
 from .calibration import CalibrationConfig, Calibrator
 from .clearing import assign_bids
 from .fairness import AgePolicy, AgeTracker
+from .faults import AgentFault
 from .jobs import JobAgent
 from .negotiation import RoundFeedback, WindowAnnouncement, build_feedback
+from .negotiation.messages import LOSS_SLICE_FAILED, LossReport
 from .policy import ClearingPolicy, GreedyWIS, Policy
 from .scoring import ScoringPolicy, score_round_async
 from .types import (DEAD_WINDOW_EPS, ClearingResult, Commitment, JobSpec,
@@ -130,6 +133,15 @@ class SchedulerConfig:
     # round-clearing backend (repro.core.policy.ClearingPolicy); None =
     # GreedyWIS (the historical greedy semantics, byte-identical)
     clearing: Optional[ClearingPolicy] = None
+    # bid-collection fault handling (active only when a fault gate is
+    # installed — ``scheduler.fault_gate``): an erroring agent's respond()
+    # is retried up to ``bid_retries`` times with capped exponential
+    # backoff; silent agents and retry-exhausted agents are DROPPED for
+    # the round (empty bid groups) so a faulty bidder never stalls it
+    bid_retries: int = 2
+    bid_backoff_base: float = 0.01
+    bid_backoff_factor: float = 2.0
+    bid_backoff_max: float = 0.25
     # bounded FMP-grid discretization cache (entries), scoped to this
     # scheduler instance — see kernels.jasda_score.ops.FMPGridCache
     grid_cache_size: int = 1024
@@ -211,6 +223,9 @@ class IterationLog:
     total_score: float
     n_windows: int = 0
     n_conflicts: int = 0
+    # agents dropped from THIS round's bid collection (silent / erroring
+    # past the retry budget) — the audit trail of graceful degradation
+    n_dropped: int = 0
 
 
 @dataclass
@@ -267,6 +282,7 @@ class RoundPrep:
     # (core.wis.SettlePrefetch; device wis_impl + prefetch-capable backend)
     wis_prefetch: Optional[object] = None
     stats_snap: Optional[Dict[str, Tuple[int, int]]] = None  # speculative only
+    n_dropped: int = 0  # agents dropped by the bid-collection fault gate
 
 
 class JasdaScheduler:
@@ -333,13 +349,24 @@ class JasdaScheduler:
         from ..kernels.jasda_score.ops import FMPGridCache
 
         self._grid_cache = FMPGridCache(maxsize=self.config.grid_cache_size)
+        # sticky per-backend health shared by the scoring and settle
+        # dispatches: one device failure anywhere degrades BOTH down the
+        # pallas → ref → numpy ladder (kernels.common.BackendHealth)
+        from ..kernels.common import BackendHealth
+
+        self.backend_health = BackendHealth()
+        # bid-collection fault gate (faults.FaultInjector or any callable
+        # ``gate(agent, now, attempt)`` raising faults.AgentFault); None =
+        # fault-free collection, byte-identical to the historical path
+        self.fault_gate = None
         # settle-side WIS backend (SchedulerConfig.wis_impl): the default is
         # the historical per-window host loop; the batched backends clear
         # every window of a round in one dispatch (core/wis.py)
         from .wis import make_round_selector
 
         self._wis_selector = make_round_selector(self.config.wis_impl,
-                                                 mesh=self.config.mesh)
+                                                 mesh=self.config.mesh,
+                                                 health=self.backend_health)
 
     # -- membership -----------------------------------------------------------
     def add_job(self, agent: JobAgent, now: float) -> None:
@@ -378,6 +405,83 @@ class JasdaScheduler:
                 agent.mark_settled(c.variant)  # work becomes biddable again
         self._epoch += 1
         return lost
+
+    # -- fault handling (core/faults.py drives these) --------------------------
+    def revoke_slice(self, slice_id: str, now: float) -> List[Commitment]:
+        """Slice death with the FULL recovery protocol (beyond drop_slice).
+
+        On top of :meth:`drop_slice` (commitments marked ``lost`` in the
+        commit_log, their work re-entering the owning agents' biddable
+        pools through ``mark_settled``), this (a) retires the slice's
+        announced windows through the :class:`DeadWindowRegistry` so an
+        ε-close twin re-derived after repair cannot resurrect immediately,
+        and (b) broadcasts an out-of-round :class:`RoundFeedback` carrying
+        one ``slice_failed`` :class:`LossReport` per revoked commitment, so
+        adaptive strategies and calibration observe the revocation the same
+        way they observe any other round outcome.  Returns the lost
+        commitments (all of whose variants the atomizer will re-chunk on
+        the next announcement).
+        """
+        tl = self.slices.get(slice_id)
+        capacity = tl.spec.capacity_bytes if tl is not None else 0.0
+        cooldown = now + self.config.dead_window_cooldown
+        if self.last_feedback is not None:
+            for w in self.last_feedback.windows:
+                if w.slice_id == slice_id:
+                    self._dead_windows.add(slice_id, w.t_min, cooldown)
+        lost = self.drop_slice(slice_id, now=now)
+        if not lost:
+            return lost
+        losses: Dict[str, List[LossReport]] = {}
+        for c in lost:
+            v = c.variant
+            w = Window(slice_id, capacity, v.t_start, v.t_end - v.t_start)
+            self._dead_windows.add(slice_id, v.t_start, cooldown)
+            losses.setdefault(v.job_id, []).append(
+                LossReport(v.variant_id, w, LOSS_SLICE_FAILED))
+        reliability: Dict[str, float] = {}
+        cal_err: Dict[str, float] = {}
+        cal_bias: Dict[str, float] = {}
+        for job_id in losses:
+            st = self.calibrator.state(job_id)
+            reliability[job_id] = float(st.rho)
+            cal_err[job_id] = float(
+                st.mean_error(self.calibrator.config.error_window))
+            cal_bias[job_id] = float(st.bias)
+        feedback = RoundFeedback(
+            t=now, windows=(), cutoffs={}, awards={},
+            losses={j: tuple(ls) for j, ls in losses.items()},
+            reliability=reliability, calibration_error=cal_err,
+            calibration_bias=cal_bias,
+        )
+        for job_id in losses:
+            agent = self.agents.get(job_id)
+            if agent is not None:
+                agent.observe_feedback(feedback)
+        self.last_feedback = feedback
+        return lost
+
+    def degrade_slice(self, slice_id: str, speed_factor: float) -> None:
+        """Straggler injection: the slice keeps running at reduced speed.
+
+        Declared capacity is unchanged (commitments stay valid); observed
+        durations inflate, ex-post ε grows, and calibration shifts bids
+        away — the paper's own trust machinery is the mitigation.
+        """
+        tl = self.slices.get(slice_id)
+        if tl is None:
+            return
+        import dataclasses
+
+        tl.spec = dataclasses.replace(
+            tl.spec, speed=tl.spec.speed * float(speed_factor))
+        self._epoch += 1
+
+    def invalidate_speculation(self) -> None:
+        """Bump the state epoch so in-flight speculative preparations are
+        discarded (fault epochs: e.g. a dispatch fault armed between
+        rounds must be observed by a FRESH dispatch, not a stale one)."""
+        self._epoch += 1
 
     # -- the interaction cycle: batched auction rounds --------------------------
     def run_round(self, now: float) -> Optional[RoundResult]:
@@ -458,13 +562,61 @@ class JasdaScheduler:
         )
         # bundle groups are consumed read-only (pooling, pipeline refilter
         # rebuilds outer lists) — keep the frozen tuples, no unwrap copy
-        bids = [list(a.respond(announcement).by_window) for a in agents]
+        bids, n_dropped = self._collect_bids(agents, announcement)
         prep = RoundPrep(
             now=now, epoch=self._epoch, windows=list(windows),
-            agents=agents, bids=bids, stats_snap=snap,
+            agents=agents, bids=bids, stats_snap=snap, n_dropped=n_dropped,
         )
         self._finalize_prep(prep)
         return prep
+
+    def _collect_bids(
+        self, agents: List[JobAgent], announcement: WindowAnnouncement
+    ) -> Tuple[List[Sequence[Sequence[Variant]]], int]:
+        """Bid collection with a deadline: faulty bidders never stall a round.
+
+        Without a fault gate this is exactly the historical comprehension
+        (one ``respond()`` per agent).  With one, each attempt first passes
+        through ``self.fault_gate(agent, now, attempt)``: a retryable
+        fault (``AgentRespondError``) retries with capped exponential
+        backoff up to ``config.bid_retries`` times; a non-retryable one
+        (``AgentSilentError`` — the deadline expiring with no response)
+        or an exhausted retry budget drops the agent for THIS round (empty
+        bid groups, counted in ``IterationLog.n_dropped``).  The gate is
+        evaluated at the ROUND time with deterministic attempt indices, so
+        a speculative (pipelined) collection replays identically to a
+        serial one.  Backoff sleeps are simulated-time no-ops: the round
+        deadline is a modeling construct, not a wall-clock wait.
+        """
+        gate = self.fault_gate
+        if gate is None:
+            return [list(a.respond(announcement).by_window)
+                    for a in agents], 0
+        cfg = self.config
+        empty: List[Sequence[Variant]] = [() for _ in announcement.windows]
+        bids: List[Sequence[Sequence[Variant]]] = []
+        dropped = 0
+        now = announcement.now
+        for a in agents:
+            def _attempt(k: int, agent=a):
+                gate(agent, now, k)
+                return list(agent.respond(announcement).by_window)
+
+            try:
+                bids.append(retry_with_backoff(
+                    _attempt,
+                    retries=cfg.bid_retries,
+                    base=cfg.bid_backoff_base,
+                    factor=cfg.bid_backoff_factor,
+                    max_delay=cfg.bid_backoff_max,
+                    sleep=lambda _delay: None,
+                    retryable=lambda e: isinstance(e, AgentFault)
+                    and e.retryable,
+                ))
+            except AgentFault:
+                bids.append(list(empty))
+                dropped += 1
+        return bids, dropped
 
     def _finalize_prep(self, prep: RoundPrep) -> None:
         """Pool assembly + packing + scoring dispatch for prepared bids.
@@ -504,6 +656,7 @@ class JasdaScheduler:
                 grid_cache=self._grid_cache,
                 view=prep.view,
                 mesh=self.config.mesh,
+                health=self.backend_health,
             )
             # Step 4a': fused score→clear — with a device wis_impl the
             # ban-free first WIS pass is dispatched right behind the
@@ -587,7 +740,7 @@ class JasdaScheduler:
             IterationLog(
                 now, prep.windows[0], prep.bidders, rr.n_bids, len(rr.selected),
                 rr.total_score, n_windows=len(prep.windows),
-                n_conflicts=rr.n_conflicts,
+                n_conflicts=rr.n_conflicts, n_dropped=prep.n_dropped,
             )
         )
         return rr
@@ -685,6 +838,34 @@ class JasdaScheduler:
             agent.mark_settled(variant)
         self._prune_commitment(variant, "failed")
         self._epoch += 1
+
+    # -- checkpointing (crash recovery; checkpoint/store.py) -------------------
+    def __getstate__(self):
+        """Picklable state for checkpointed crash recovery.
+
+        ``_commit_index`` is keyed by ``id(variant)`` — identities do not
+        survive a pickle round-trip, so the index is serialized as its
+        entry list and re-keyed on the restored variant objects in
+        :meth:`__setstate__`.  Pickling the scheduler TOGETHER with any
+        simulator state that shares its Variant objects (one combined
+        dump) preserves those identities across the boundary, which is
+        what makes ``complete()``/``fail()`` identity lookups keep working
+        after a restore.  Requires ``config.mesh is None`` (device meshes
+        are process-bound and cannot ride a checkpoint).
+        """
+        if self.config.mesh is not None:
+            raise ValueError(
+                "checkpointing a mesh-sharded scheduler is unsupported: "
+                "jax meshes are process-bound (set SchedulerConfig.mesh=None)")
+        state = self.__dict__.copy()
+        state["_commit_index"] = list(self._commit_index.values())
+        return state
+
+    def __setstate__(self, state):
+        entries = state.pop("_commit_index")
+        self.__dict__.update(state)
+        self._commit_index = {
+            id(c.variant): (c, rec) for c, rec in entries}
 
     # -- reporting ------------------------------------------------------------
     def utilization(self, t_from: float, t_to: float) -> Dict[str, float]:

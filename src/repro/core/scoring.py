@@ -270,9 +270,17 @@ class ScoreHandle:
     leaks into a selection.
     """
 
-    def __init__(self, scores, m: Optional[int] = None):
+    def __init__(self, scores, m: Optional[int] = None, fallback=None,
+                 health=None, backend: Optional[str] = None):
         self._scores = scores
         self._m = m
+        # host recompute closure (the numpy reference scores) + the sticky
+        # health to notify: an ASYNC device failure only surfaces when the
+        # in-flight array materializes, so result() is the last line of the
+        # degradation ladder
+        self._fallback = fallback
+        self._health = health
+        self._backend = backend
 
     @property
     def in_flight(self) -> bool:
@@ -286,9 +294,20 @@ class ScoreHandle:
 
     def result(self) -> np.ndarray:
         if not isinstance(self._scores, np.ndarray):
-            # np.asarray on a jax array blocks until the computation lands
-            arr = np.asarray(self._scores, dtype=np.float64)
-            self._scores = arr[: self._m] if self._m is not None else arr
+            try:
+                # np.asarray on a jax array blocks until the computation lands
+                arr = np.asarray(self._scores, dtype=np.float64)
+                self._scores = arr[: self._m] if self._m is not None else arr
+            except Exception as exc:
+                if self._fallback is None:
+                    raise
+                # device died after the async launch: degrade to the host
+                # recompute and make the failure sticky so the NEXT round
+                # never dispatches on this backend again
+                if self._health is not None and self._backend is not None:
+                    self._health.mark_failed(
+                        self._backend, f"in-flight materialize: {exc}")
+                self._scores = np.asarray(self._fallback(), np.float64)
         return self._scores
 
 
@@ -307,6 +326,7 @@ def score_round_async(
     grid_cache=None,
     view=None,
     mesh=None,
+    health=None,
 ) -> ScoreHandle:
     """Pack + dispatch one pooled round; return without blocking on scores.
 
@@ -350,10 +370,9 @@ def score_round_async(
         theta=theta, cache=grid_cache,
         view=view,
     )
-    if impl is None and m < SMALL_POOL_M:
-        # device-dispatch overhead dominates tiny pools; same math on host
-        impl = "numpy"
-    if impl == "numpy":
+    def _numpy_scores() -> np.ndarray:
+        # host float64 reference: the ladder's last rung, also the small-
+        # pool fast path.  Ranks match the legacy per-window path.
         if recheck:
             from ..kernels.jasda_score.ops import score_variants_numpy
 
@@ -362,27 +381,56 @@ def score_round_async(
                 packed.mu, packed.sg,
                 lam=policy.lam, capacity=packed.caps, theta=packed.thetas,
             )
-            return ScoreHandle(np.asarray(scores, np.float64))
-        # packed arrays are float64: ranks match the legacy per-window path
+            return np.asarray(scores, np.float64)
         hh = np.clip(packed.fj @ packed.alphas, 0.0, 1.0)
         ff = np.clip(packed.fs @ packed.betas, 0.0, 1.0)
-        return ScoreHandle(policy.lam * hh + (1.0 - policy.lam) * ff)
+        return policy.lam * hh + (1.0 - policy.lam) * ff
 
+    if impl is None and m < SMALL_POOL_M:
+        # device-dispatch overhead dominates tiny pools; same math on host
+        impl = "numpy"
+    dev_impl = impl
+    if dev_impl is not None and dev_impl != "numpy" and health is not None:
+        dev_impl = health.resolve(dev_impl)
+    if dev_impl is None and health is not None:
+        # resolve the auto choice so sticky failures steer it too
+        import jax
+
+        dev_impl = health.resolve(
+            "pallas" if jax.default_backend() == "tpu" else "ref")
+    if dev_impl == "numpy":
+        return ScoreHandle(_numpy_scores())
+
+    from ..kernels.common import KernelDispatchError
     from ..kernels.jasda_score.ops import score_variants
 
     # trim=False keeps the bucket-padded device array on the handle: the
     # fused settle dispatch gathers weights from it shape-stably (padded
-    # rows are self-masking, and result() slices back to m on the host)
-    scores, _, _ = score_variants(
-        packed.fj, packed.fs, packed.alphas, packed.betas, packed.mu, packed.sg,
-        lam=policy.lam,
-        capacity=packed.caps if recheck else 1.0,
-        theta=packed.thetas if recheck else 1.0,
-        impl=impl,
-        trim=False,
-        mesh=mesh,
-    )
-    return ScoreHandle(scores, m=m)
+    # rows are self-masking, and result() slices back to m on the host).
+    # With a BackendHealth attached the dispatch walks the degradation
+    # ladder: a failing backend is marked sick (sticky) and the round
+    # re-dispatches one rung down, bottoming out at the host numpy path.
+    while True:
+        try:
+            scores, _, _ = score_variants(
+                packed.fj, packed.fs, packed.alphas, packed.betas,
+                packed.mu, packed.sg,
+                lam=policy.lam,
+                capacity=packed.caps if recheck else 1.0,
+                theta=packed.thetas if recheck else 1.0,
+                impl=dev_impl,
+                trim=False,
+                mesh=mesh,
+            )
+            return ScoreHandle(scores, m=m, fallback=_numpy_scores,
+                               health=health, backend=dev_impl)
+        except KernelDispatchError as exc:
+            if health is None:
+                raise
+            health.mark_failed(exc.backend, str(exc))
+            dev_impl = health.resolve(exc.backend)
+            if dev_impl == "numpy":
+                return ScoreHandle(_numpy_scores())
 
 
 def score_round(

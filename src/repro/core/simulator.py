@@ -28,11 +28,13 @@ from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from .fairness import jain_index
+from .faults import (DEVICE_DISPATCH_FAIL, SCHEDULER_CRASH, SLICE_DEGRADED,
+                     SLICE_REVOKED, FaultInjector, FaultPlan)
 from .jobs import JobAgent
 from .scheduler import JasdaScheduler, SchedulerConfig
 from .types import JobSpec, SliceSpec, Variant
@@ -87,6 +89,10 @@ class SimResult:
     # scheduler name) so preset sweeps stay self-describing
     policy: str = ""
     clearing: str = ""
+    # the scheduler that FINISHED the run: after a scheduler_crash +
+    # checkpoint restore this is the restored instance, not the one the
+    # caller passed in (whose state is pre-crash and stale)
+    scheduler: object = field(default=None, repr=False, compare=False)
 
     def summary(self) -> str:
         tag = ""
@@ -101,15 +107,37 @@ class SimResult:
         )
 
 
-# Event kinds, ordered: completions before scheduler ticks at equal time.
-_COMPLETE, _FAIL, _REPAIR, _ARRIVE, _TICK = 0, 1, 2, 3, 4
+# Event kinds, ordered: completions before scheduler ticks at equal time;
+# planned fault events fire AFTER the tick sharing their timestamp (the
+# round at t observes faults injected strictly before t).
+_COMPLETE, _FAIL, _REPAIR, _ARRIVE, _TICK, _FAULT = 0, 1, 2, 3, 4, 5
 
 
 def simulate(
     scheduler: JasdaScheduler,
     agents: Sequence[JobAgent],
     cfg: SimConfig = SimConfig(),
+    *,
+    faults: Optional[FaultPlan] = None,
+    checkpoint=None,
+    checkpoint_every: int = 1,
 ) -> SimResult:
+    """Drive the scheduler against the synthetic cluster (module docstring).
+
+    ``faults`` (a :class:`~repro.core.faults.FaultPlan`) injects the
+    deterministic fault schedule: slice revocations/degradations and
+    device-dispatch failures are delivered through the event heap; agent
+    silent/error windows are enforced by the scheduler's bid-collection
+    gate; ``scheduler_crash`` events kill the in-memory state and restore
+    the latest checkpoint (requires ``checkpoint``, a
+    :class:`~repro.checkpoint.CheckpointStore`; crashes are ignored
+    without one).  With ``checkpoint`` set, the FULL simulation state
+    (scheduler + calibrator + agents + event heap + rng) is snapshotted
+    before every ``checkpoint_every``-th tick — speculation is flushed
+    first (semantics-preserving), so a snapshot never captures an
+    in-flight round.  Crash-at-round-k + restore replays byte-identically
+    to the uninterrupted run under the same plan (tested).
+    """
     rng = np.random.default_rng(cfg.seed)
     events: List[Tuple[float, int, int, object]] = []
     seq = 0
@@ -130,6 +158,16 @@ def simulate(
             while t < cfg.t_end:
                 push(t, _FAIL, sid)
                 t += cfg.repair_time + rng.exponential(1.0 / cfg.failure_rate)
+
+    # deterministic fault plan: slice/device/crash events ride the heap;
+    # agent silent/error windows live in the gate (time-windowed, so
+    # speculative bid collections replay identically — see core/faults.py)
+    if faults is not None:
+        injector = faults if isinstance(faults, FaultInjector) \
+            else FaultInjector(faults)
+        scheduler.fault_gate = injector
+        for e in injector.scheduled_events():
+            push(e.t, _FAULT, e)
 
     # multi-tick round pipelining: JASDA schedulers expose the prepare/settle
     # split; baselines fall back to their serial run_round
@@ -177,8 +215,44 @@ def simulate(
 
     pending: List[Variant] = []  # committed, waiting for t_start
 
+    store = checkpoint
+    tick_count = 0
+    # crash events already delivered this PROCESS lifetime.  Deliberately a
+    # plain local that is NOT part of the checkpointed state: the restored
+    # heap still contains the crash event that triggered the restore, and
+    # skipping it on the re-pop is exactly what makes recovery terminate.
+    consumed_crashes: Set[Tuple[float, int]] = set()
+
     while events:
-        t, kind, _, payload = heapq.heappop(events)
+        # snapshot BEFORE the tick executes: restore resumes at round k with
+        # the heap (including the pending tick itself) exactly as it was
+        if store is not None and events[0][1] == _TICK:
+            if tick_count % checkpoint_every == 0:
+                if pipe is not None:
+                    pipe.flush()  # speculation holds device handles; flushing
+                    # is semantics-preserving (pipeline equivalence contract)
+                from ..kernels.common import dispatch_faults_snapshot
+
+                store.save_state(tick_count, {
+                    "scheduler": scheduler,
+                    "agents": list(agents),
+                    "events": list(events),
+                    "seq": seq,
+                    "running": running,
+                    "pending": pending,
+                    "dead_slices": dead_slices,
+                    "jct": jct,
+                    "arrival": arrival,
+                    "violations": violations,
+                    "iterations": iterations,
+                    "now": now,
+                    "rng": rng,
+                    "tick_count": tick_count,
+                    "armed_faults": dispatch_faults_snapshot(),
+                })
+            tick_count += 1
+
+        t, kind, eseq, payload = heapq.heappop(events)
         if t > cfg.t_end:
             break
         now = t
@@ -259,6 +333,64 @@ def simulate(
             if spec is not None:
                 scheduler.add_slice(spec)
 
+        elif kind == _FAULT:
+            e = payload
+            if e.kind == SLICE_REVOKED:
+                sid = e.target
+                if sid not in scheduler.slices:
+                    continue
+                spec = scheduler.slices[sid].spec
+                if sid in running:
+                    v, _ = running.pop(sid)
+                    scheduler.fail(v, now)
+                # revoke (vs drop): requeues lost commitments through the
+                # atomizer, retires the slice's windows in the dead-window
+                # registry, and notifies winners via LOSS_SLICE_FAILED
+                scheduler.revoke_slice(sid, now)
+                pending = [p for p in pending if p.slice_id != sid]
+                dead_slices[sid] = spec
+                if e.duration > 0:
+                    push(now + e.duration, _REPAIR, sid)
+            elif e.kind == SLICE_DEGRADED:
+                if e.target in scheduler.slices:
+                    scheduler.degrade_slice(e.target, e.magnitude)
+            elif e.kind == DEVICE_DISPATCH_FAIL:
+                from ..kernels.common import inject_dispatch_fault
+
+                inject_dispatch_fault(e.target or "ref")
+                # bump the scheduler epoch so any speculative prep rebuilds
+                # and the armed fault lands at a deterministic dispatch
+                scheduler.invalidate_speculation()
+            elif e.kind == SCHEDULER_CRASH:
+                key = (t, eseq)
+                if (store is None or key in consumed_crashes
+                        or store.latest_step() is None):
+                    continue  # nothing to restore from: crash is a no-op
+                consumed_crashes.add(key)
+                from ..kernels.common import restore_dispatch_faults
+
+                state, _ = store.restore_state()
+                # rebind EVERY loop local from the snapshot — the closures
+                # (push/launch) read these via the shared function scope
+                scheduler = state["scheduler"]
+                agents = state["agents"]
+                events = state["events"]
+                heapq.heapify(events)
+                seq = state["seq"]
+                running = state["running"]
+                pending = state["pending"]
+                dead_slices = state["dead_slices"]
+                jct = state["jct"]
+                arrival = state["arrival"]
+                violations = state["violations"]
+                iterations = state["iterations"]
+                now = state["now"]
+                rng = state["rng"]
+                tick_count = state["tick_count"]
+                restore_dispatch_faults(state["armed_faults"])
+                if pipe is not None:
+                    pipe = RoundPipeline(scheduler)
+
     if pipe is not None:
         pipe.flush()  # roll back any outstanding speculative bid statistics
 
@@ -326,6 +458,7 @@ def simulate(
         calibration=cal,
         strategy_stats=strategy_stats,
         iterations=iterations,
+        scheduler=scheduler,
     )
 
 

@@ -308,7 +308,24 @@ class SettlePrefetch:
 
     def materialize(self, scores: np.ndarray):
         packed = self.packed
-        sel = np.asarray(self._raw)[: packed.n_windows]
+        try:
+            sel = np.asarray(self._raw)[: packed.n_windows]
+        except Exception as exc:
+            # the fused dispatch died IN FLIGHT (device lost after the async
+            # launch): surface it as a typed dispatch error so the settle
+            # falls back to the unfused path, and mark the backend so the
+            # sticky ladder never re-trusts it
+            from ..kernels.common import KernelDispatchError
+
+            health = getattr(self.selector, "health", None)
+            backend = getattr(self.selector, "impl", "unknown")
+            if health is not None and not isinstance(exc, KernelDispatchError):
+                health.mark_failed(backend, f"prefetch materialize: {exc}")
+            if isinstance(exc, KernelDispatchError):
+                raise
+            raise KernelDispatchError(
+                backend, "settle_prefetch",
+                tuple(packed.idx_sorted.shape), cause=exc) from exc
         first_pass = [
             [int(i) for i in packed.idx_sorted[k][np.flatnonzero(sel[k])]]
             for k in range(packed.n_windows)
@@ -378,7 +395,7 @@ class RoundSelector:
 
     batched = True
 
-    def __init__(self, impl: str = "numpy", mesh=None):
+    def __init__(self, impl: str = "numpy", mesh=None, health=None):
         if impl not in ("numpy", "ref", "pallas"):
             raise ValueError(
                 f"wis_impl must be one of 'numpy' | 'ref' | 'pallas', got {impl!r}")
@@ -386,10 +403,18 @@ class RoundSelector:
         # auction mesh (launch.mesh.make_auction_mesh): shards the window
         # rows of every batched dispatch; host backend has nothing to shard
         self.mesh = mesh if impl in ("ref", "pallas") else None
+        # sticky per-backend health (kernels.common.BackendHealth), shared
+        # with the scheduler's scoring dispatches: a failed device backend
+        # degrades every future settle down the pallas → ref → numpy ladder
+        self.health = health
+
+    def _effective_impl(self) -> str:
+        return self.health.resolve(self.impl) if self.health is not None \
+            else self.impl
 
     @property
     def device(self) -> bool:
-        return self.impl in ("ref", "pallas")
+        return self._effective_impl() in ("ref", "pallas")
 
     def __repr__(self) -> str:  # pragma: no cover - debugging nicety
         if self.mesh is not None:
@@ -530,21 +555,35 @@ class RoundSelector:
         return [int(idx_row[s]) for s in sel]
 
     def _dispatch(self, w: np.ndarray, pred: np.ndarray) -> np.ndarray:
-        if self.impl == "numpy":
+        impl = self._effective_impl()
+        if impl == "numpy":
             return _batch_dp_backtrack_numpy(w, pred)
         # device path: pad the row dim to its pow2 bucket (zero rows clear
         # empty) so the jit cache is keyed on bucketed shapes only
+        from ..kernels.common import KernelDispatchError
         from ..kernels.wis_dp import ops as wis_ops
 
         r = w.shape[0]
         rb = _bucket(r, MIN_ROW_BUCKET)
+        wp, pp = w, pred
         if rb != r:
-            w = np.concatenate([w, np.zeros((rb - r, w.shape[1]), w.dtype)])
-            pred = np.concatenate(
+            wp = np.concatenate([w, np.zeros((rb - r, w.shape[1]), w.dtype)])
+            pp = np.concatenate(
                 [pred, np.zeros((rb - r, pred.shape[1]), pred.dtype)])
-        sel, _ = wis_ops.wis_settle_batch(
-            w.astype(np.float32), pred, impl=self.impl, mesh=self.mesh)
-        return np.asarray(sel)[:r]
+        # degradation ladder: a failing device backend is marked sick
+        # (sticky) and the dispatch retries one rung down, ending at the
+        # host float64 DP, which cannot fail
+        while impl != "numpy":
+            try:
+                sel, _ = wis_ops.wis_settle_batch(
+                    wp.astype(np.float32), pp, impl=impl, mesh=self.mesh)
+                return np.asarray(sel)[:r]
+            except KernelDispatchError as exc:
+                if self.health is None:
+                    raise
+                self.health.mark_failed(impl, str(exc))
+                impl = self.health.resolve(impl)
+        return _batch_dp_backtrack_numpy(w, pred)
 
     # -- fused score→clear dispatch (device backends only) ---------------------
     def predispatch(self, n_windows: int, win_idx, view, handle,
@@ -585,9 +624,19 @@ class RoundSelector:
             # masked lanes; 1.0 keeps the gather shape-stable)
             tr = np.ones(int(handle.device_scores.shape[0]), np.float32)
             tr[: len(transform)] = np.asarray(transform, np.float32)
-        sel, _ = wis_ops.wis_settle_fused(
-            handle.device_scores, idx.astype(np.int32), idx >= 0, pred,
-            impl=self.impl, mesh=self.mesh, transform=tr)
+        from ..kernels.common import KernelDispatchError
+
+        try:
+            sel, _ = wis_ops.wis_settle_fused(
+                handle.device_scores, idx.astype(np.int32), idx >= 0, pred,
+                impl=self._effective_impl(), mesh=self.mesh, transform=tr)
+        except KernelDispatchError as exc:
+            # speculation is optional: mark the backend sick and settle
+            # without fusion (the settle half re-clears from host scores)
+            if self.health is None:
+                raise
+            self.health.mark_failed(exc.backend, str(exc))
+            return None
         return SettlePrefetch(packed, sel, self,
                               transformed=transform is not None)
 
@@ -616,7 +665,7 @@ def predispatch_settle(selector, backend, n_windows: int, win_idx, view,
     return None
 
 
-def make_round_selector(impl: Optional[str], mesh=None):
+def make_round_selector(impl: Optional[str], mesh=None, health=None):
     """Map the ``wis_impl`` knob (plus an optional auction mesh) to a selector.
 
     None → the historical per-window :func:`wis_select` host loop (the
@@ -629,7 +678,7 @@ def make_round_selector(impl: Optional[str], mesh=None):
     """
     if impl is None:
         return wis_select
-    return RoundSelector(impl, mesh=mesh)
+    return RoundSelector(impl, mesh=mesh, health=health)
 
 
 def wis_select_batch(starts, ends, weights, valid=None, *, impl: str = "numpy"):

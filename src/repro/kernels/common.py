@@ -1,14 +1,156 @@
-"""Shared kernel utilities: dispatch policy + numerics helpers."""
+"""Shared kernel utilities: dispatch policy, fault surface + numerics.
+
+Besides the numerics helpers this module owns the kernel packages' fault
+surface: every device dispatch in ``jasda_score`` and ``wis_dp`` funnels
+raw XLA/pallas errors into a typed :class:`KernelDispatchError` (backend +
+bucketed operand shape attached), and :class:`BackendHealth` is the sticky
+per-backend ladder state the scheduler uses to degrade pallas → ref →
+host numpy without ever re-trying a backend that failed once (so the
+zero-retrace contract holds per HEALTHY backend: a jit cache is only ever
+consulted while its backend is trusted, and abandoning a backend abandons
+its cache wholesale instead of thrashing it).
+
+``inject_dispatch_fault`` is the deterministic fault-injection hook for
+tests and the simulator's ``device_dispatch_fail`` event: it arms ONE
+failure for a named backend; the next dispatch on that backend raises
+``KernelDispatchError`` before touching the device.
+"""
 from __future__ import annotations
 
 import functools
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["use_interpret", "log_ndtr", "NEG_INF"]
+__all__ = [
+    "use_interpret",
+    "log_ndtr",
+    "NEG_INF",
+    "KernelDispatchError",
+    "BackendHealth",
+    "DEGRADATION_LADDER",
+    "inject_dispatch_fault",
+    "clear_dispatch_faults",
+    "check_dispatch_fault",
+    "dispatch_faults_snapshot",
+    "restore_dispatch_faults",
+]
 
 NEG_INF = -1e30  # large-negative for masking (avoids inf-inf NaNs in bf16)
+
+#: backend order the scheduler walks when a dispatch fails; "numpy" is the
+#: host float64 reference and never raises KernelDispatchError.
+DEGRADATION_LADDER = ("pallas", "ref", "numpy")
+
+
+class KernelDispatchError(RuntimeError):
+    """A device dispatch failed; carries backend + bucketed operand shape.
+
+    Raised instead of whatever XLA/pallas error surfaced so callers can
+    (a) tell WHICH backend of a fused round failed and at what bucket
+    shape (real-TPU debugging: bucket shape identifies the retraced
+    executable), and (b) drive the degradation ladder on a stable type
+    rather than string-matching runtime errors.
+    """
+
+    def __init__(self, backend: str, op: str,
+                 shape: Tuple[int, ...] = (),
+                 cause: Optional[BaseException] = None):
+        self.backend = backend
+        self.op = op
+        self.shape = tuple(int(s) for s in shape)
+        self.cause = cause
+        detail = f" <- {type(cause).__name__}: {cause}" if cause else ""
+        super().__init__(
+            f"{op}[{backend}] dispatch failed at bucket shape "
+            f"{self.shape}{detail}")
+
+
+class BackendHealth:
+    """Sticky per-backend health: once a backend fails it stays failed.
+
+    One instance is shared by a scheduler's scoring AND settle dispatches
+    so a pallas failure observed while scoring also steers the round's
+    WIS settle away from pallas.  ``resolve(preferred)`` walks the
+    degradation ladder from the preferred backend to the first healthy
+    one ("numpy" is always healthy — the host reference path has no
+    device to lose).  Stickiness is what makes fault landing
+    deterministic across serial and pipelined runs: after the first
+    failure the chosen backend no longer depends on WHEN subsequent
+    dispatches happen.
+    """
+
+    def __init__(self) -> None:
+        self._failed: Dict[str, str] = {}
+
+    def mark_failed(self, backend: str, reason: str = "") -> None:
+        self._failed.setdefault(backend, reason)
+
+    def healthy(self, backend: str) -> bool:
+        return backend not in self._failed
+
+    def resolve(self, preferred: str) -> str:
+        """First healthy backend at or below ``preferred`` on the ladder."""
+        if preferred not in DEGRADATION_LADDER:
+            return preferred if self.healthy(preferred) else "numpy"
+        start = DEGRADATION_LADDER.index(preferred)
+        for backend in DEGRADATION_LADDER[start:]:
+            if self.healthy(backend):
+                return backend
+        return "numpy"
+
+    def failed_backends(self) -> Dict[str, str]:
+        return dict(self._failed)
+
+    # snapshot/restore hooks used by checkpointed crash recovery ---------
+    def snapshot(self) -> Dict[str, str]:
+        return dict(self._failed)
+
+    def restore(self, snap: Dict[str, str]) -> None:
+        self._failed = dict(snap)
+
+
+# Armed one-shot dispatch faults: backend -> remaining failure count.
+# Module-level (not per-scheduler) because the dispatch functions in the
+# kernel packages are free functions; determinism comes from the FAULT PLAN
+# arming them at seeded times, and stickiness of BackendHealth means at most
+# the FIRST dispatch after arming observes the fault.
+_ARMED_FAULTS: Dict[str, int] = {}
+
+
+def inject_dispatch_fault(backend: str, count: int = 1) -> None:
+    """Arm ``count`` dispatch failures for ``backend`` (test/sim hook)."""
+    _ARMED_FAULTS[backend] = _ARMED_FAULTS.get(backend, 0) + int(count)
+
+
+def clear_dispatch_faults() -> None:
+    _ARMED_FAULTS.clear()
+
+
+def dispatch_faults_snapshot() -> Dict[str, int]:
+    """Armed-but-unfired faults (checkpointed so crash restore replays a
+    fault armed between the checkpoint and the crash exactly once)."""
+    return dict(_ARMED_FAULTS)
+
+
+def restore_dispatch_faults(snap: Dict[str, int]) -> None:
+    _ARMED_FAULTS.clear()
+    _ARMED_FAULTS.update({k: int(v) for k, v in snap.items()})
+
+
+def check_dispatch_fault(backend: str, op: str,
+                         shape: Tuple[int, ...] = ()) -> None:
+    """Raise KernelDispatchError if a fault is armed for ``backend``."""
+    n = _ARMED_FAULTS.get(backend, 0)
+    if n > 0:
+        if n == 1:
+            _ARMED_FAULTS.pop(backend, None)
+        else:
+            _ARMED_FAULTS[backend] = n - 1
+        raise KernelDispatchError(
+            backend, op, shape,
+            cause=RuntimeError("injected dispatch fault"))
 
 
 @functools.cache

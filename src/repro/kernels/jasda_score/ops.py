@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..common import use_interpret
+from ..common import KernelDispatchError, check_dispatch_fault, use_interpret
 from .kernel import TRACE_COUNT as _PALLAS_TRACE_COUNT
 from .kernel import score_variants_pallas
 from .ref import score_variants_reference
@@ -222,27 +222,45 @@ def score_variants(
         if n_shards <= 1 or not spec_sharded(auction_row_spec(mesh, m_pad)):
             n_shards = 1  # degenerate / non-dividing mesh: unsharded path
 
+    # typed fault surface: injected faults fire before the device is
+    # touched; raw XLA/pallas errors are re-raised as KernelDispatchError
+    # carrying backend + bucketed shape (the degradation ladder keys on it)
+    check_dispatch_fault(impl, "score_variants", (m_pad, fj.shape[1]))
     if impl == "ref":
-        if n_shards > 1:
-            score, elig, p_exceed = _sharded_score_fn(mesh, "ref", 0, False)(
-                fj, fs, alphas, betas, mu_p, sg_p, lam_v, cap_v, th_v)
-        else:
-            score, elig, p_exceed = _score_ref_jit(
-                fj, fs, alphas, betas, mu_p, sg_p, lam_v, cap_v, th_v
-            )
+        try:
+            if n_shards > 1:
+                score, elig, p_exceed = _sharded_score_fn(mesh, "ref", 0, False)(
+                    fj, fs, alphas, betas, mu_p, sg_p, lam_v, cap_v, th_v)
+            else:
+                score, elig, p_exceed = _score_ref_jit(
+                    fj, fs, alphas, betas, mu_p, sg_p, lam_v, cap_v, th_v
+                )
+        except KernelDispatchError:
+            raise
+        except Exception as exc:
+            raise KernelDispatchError(
+                "ref", "score_variants", (m_pad, fj.shape[1]), cause=exc
+            ) from exc
         return score[:end], elig[:end], p_exceed[:end]
 
     # per-SHARD row extent bounds the pallas block size under sharding
     bm = min(block_m, max(8, m_pad // n_shards))
-    if n_shards > 1:
-        score, elig = _sharded_score_fn(mesh, "pallas", bm, use_interpret())(
-            fj, fs, alphas, betas, mu_p, sg_p, lam_v, cap_v, th_v)
-    else:
-        score, elig = score_variants_pallas(
-            fj, fs, alphas, betas, mu_p, sg_p,
-            lam=lam_v, capacity=cap_v, theta=th_v,
-            block_m=bm, interpret=use_interpret(),
-        )
+    try:
+        if n_shards > 1:
+            score, elig = _sharded_score_fn(mesh, "pallas", bm, use_interpret())(
+                fj, fs, alphas, betas, mu_p, sg_p, lam_v, cap_v, th_v)
+        else:
+            score, elig = score_variants_pallas(
+                fj, fs, alphas, betas, mu_p, sg_p,
+                lam=lam_v, capacity=cap_v, theta=th_v,
+                block_m=bm, interpret=use_interpret(),
+            )
+    except KernelDispatchError:
+        raise
+    except Exception as exc:
+        raise KernelDispatchError(
+            impl, "score_variants", (m_pad, fj.shape[1]), cause=exc
+        ) from exc
     # kernel does not return p_exceed; recompute lazily only if needed
     return score[:end], elig[:end], None
 

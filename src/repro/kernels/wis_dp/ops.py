@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..common import use_interpret
+from ..common import KernelDispatchError, check_dispatch_fault, use_interpret
 from .kernel import wis_batch_pallas, wis_dp_pallas
 from .ref import wis_batch_reference, wis_dp_reference
 
@@ -199,12 +199,20 @@ def wis_settle_batch(weights, pred, *, impl: Optional[str] = None, mesh=None):
     pred = jnp.asarray(pred, jnp.int32)
     if impl is None:
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
-    if _settle_shards(mesh, weights.shape[0]) > 1:
-        return _sharded_settle_fn(mesh, impl, use_interpret(), False, False)(
-            weights, pred)
-    if impl == "ref":
-        return _settle_ref_jit(weights, pred)
-    return _settle_pallas_jit(weights, pred, use_interpret())
+    shape = tuple(int(s) for s in weights.shape)
+    check_dispatch_fault(impl, "wis_settle_batch", shape)
+    try:
+        if _settle_shards(mesh, weights.shape[0]) > 1:
+            return _sharded_settle_fn(mesh, impl, use_interpret(), False, False)(
+                weights, pred)
+        if impl == "ref":
+            return _settle_ref_jit(weights, pred)
+        return _settle_pallas_jit(weights, pred, use_interpret())
+    except KernelDispatchError:
+        raise
+    except Exception as exc:
+        raise KernelDispatchError(
+            impl, "wis_settle_batch", shape, cause=exc) from exc
 
 
 def wis_settle_fused(scores, idx, mask, pred, *, impl: Optional[str] = None,
@@ -233,20 +241,28 @@ def wis_settle_fused(scores, idx, mask, pred, *, impl: Optional[str] = None,
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
     if transform is not None:
         transform = jnp.asarray(transform, jnp.float32)
-    if _settle_shards(mesh, idx.shape[0]) > 1:
-        fn = _sharded_settle_fn(mesh, impl, use_interpret(), True,
-                                transform is not None)
+    shape = tuple(int(s) for s in idx.shape)
+    check_dispatch_fault(impl, "wis_settle_fused", shape)
+    try:
+        if _settle_shards(mesh, idx.shape[0]) > 1:
+            fn = _sharded_settle_fn(mesh, impl, use_interpret(), True,
+                                    transform is not None)
+            if transform is not None:
+                return fn(scores, transform, idx, mask, pred)
+            return fn(scores, idx, mask, pred)
         if transform is not None:
-            return fn(scores, transform, idx, mask, pred)
-        return fn(scores, idx, mask, pred)
-    if transform is not None:
+            if impl == "ref":
+                return _settle_ref_fused_tr_jit(scores, transform, idx, mask, pred)
+            return _settle_pallas_fused_tr_jit(scores, transform, idx, mask, pred,
+                                               use_interpret())
         if impl == "ref":
-            return _settle_ref_fused_tr_jit(scores, transform, idx, mask, pred)
-        return _settle_pallas_fused_tr_jit(scores, transform, idx, mask, pred,
-                                           use_interpret())
-    if impl == "ref":
-        return _settle_ref_fused_jit(scores, idx, mask, pred)
-    return _settle_pallas_fused_jit(scores, idx, mask, pred, use_interpret())
+            return _settle_ref_fused_jit(scores, idx, mask, pred)
+        return _settle_pallas_fused_jit(scores, idx, mask, pred, use_interpret())
+    except KernelDispatchError:
+        raise
+    except Exception as exc:
+        raise KernelDispatchError(
+            impl, "wis_settle_fused", shape, cause=exc) from exc
 
 
 def wis_dp(weights, pred, *, impl: Optional[str] = None):

@@ -17,9 +17,56 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set
+from typing import Callable, Dict, List, Optional, Set
 
-__all__ = ["HealthMonitor", "HealthConfig"]
+import numpy as np
+
+__all__ = ["HealthMonitor", "HealthConfig", "retry_with_backoff"]
+
+
+def retry_with_backoff(
+    fn: Callable[[int], object],
+    *,
+    retries: int = 3,
+    base: float = 0.05,
+    factor: float = 2.0,
+    max_delay: float = 1.0,
+    jitter: float = 0.0,
+    rng: Optional[np.random.Generator] = None,
+    sleep: Callable[[float], None] = time.sleep,
+    retryable: Callable[[BaseException], bool] = lambda e: True,
+):
+    """Call ``fn(attempt)`` with capped exponential backoff between retries.
+
+    ``fn`` receives the 0-based attempt index (so callers can make
+    per-attempt decisions deterministic).  Up to ``retries`` retries are
+    made after the first attempt; the delay before retry ``k`` (1-based)
+    is ``min(base * factor**(k-1), max_delay)`` plus a deterministic
+    jitter term ``U[0, jitter) * delay`` drawn from ``rng`` — with a
+    seeded generator the full delay sequence is reproducible, which is
+    what lets fault-injection runs replay byte-identically.
+
+    Exceptions for which ``retryable`` returns False propagate
+    immediately; the last exception propagates when attempts are
+    exhausted.  ``sleep`` is injectable so simulated time never blocks
+    on wall-clock waits (the simulator passes a no-op).
+    """
+    if retries < 0:
+        raise ValueError(f"retries must be >= 0, got {retries}")
+    last: Optional[BaseException] = None
+    for attempt in range(retries + 1):
+        try:
+            return fn(attempt)
+        except BaseException as exc:  # noqa: BLE001 - filtered by `retryable`
+            if not retryable(exc) or attempt == retries:
+                raise
+            last = exc
+            delay = min(base * factor**attempt, max_delay)
+            if jitter > 0.0 and rng is not None:
+                delay += float(rng.uniform(0.0, jitter)) * delay
+            if delay > 0.0:
+                sleep(delay)
+    raise last  # pragma: no cover - unreachable (loop always returns/raises)
 
 
 @dataclass(frozen=True)
