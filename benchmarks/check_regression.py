@@ -47,6 +47,13 @@ Two classes of check:
       feedback loop's value contract, exact) — and the deterministic
       ``advantage=`` score gap may not drop more than ``tol`` below
       baseline.
+    - ``service_latency_*``: ``deterministic=True`` must hold (two
+      fixed-seed soaks produce identical award logs + stats, exact) and
+      ``overload_ok=True`` must hold (bounded-queue admission retains
+      ≥90% of the 1.0x goodput at 2.0x overload while accept-all
+      degrades below it, exact); the ``p99=`` decision latency and
+      ``goodput_retained=`` are gated relative to baseline — both are
+      simulated-time metrics, so machine speed cancels entirely.
 
 * **Absolute latency** (loose, default 5x via ``--us-tol``):
   ``us_per_call`` of gated rows against baseline.  Shared CI runners and
@@ -75,7 +82,7 @@ import sys
 
 GATED_PREFIXES = ("round_throughput_", "score_dispatch_", "pipeline_overlap_",
                   "policy_clearing_", "adaptive_bidding_", "settle_throughput_",
-                  "shard_scaling_", "fault_recovery_")
+                  "shard_scaling_", "fault_recovery_", "service_latency_")
 
 
 def _load(path: str) -> dict:
@@ -183,6 +190,39 @@ def check(fresh: dict, baseline: dict, tol: float, us_tol: float,
                     f"{name}: goodput retained under faults {gr:.3f} vs "
                     f"baseline {base_gr:.3f} (-{(1 - gr / base_gr) * 100:.0f}%"
                     f" > {tol * 100:.0f}% tolerance)")
+
+        if name.startswith("service_latency_"):
+            # soak determinism and the admission-control contract are
+            # exact; p99 decision latency and goodput retained under 2x
+            # overload are gated relative to baseline (simulated-time
+            # metrics: machine speed cancels entirely)
+            if ("deterministic=" in base_row.get("derived", "")
+                    and "deterministic=True" not in row.get("derived", "")):
+                failures.append(
+                    f"{name}: fixed-seed soak no longer deterministic "
+                    f"(award log or ServiceStats diverged): "
+                    f"{row.get('derived')!r}")
+            if ("overload_ok=" in base_row.get("derived", "")
+                    and "overload_ok=True" not in row.get("derived", "")):
+                failures.append(
+                    f"{name}: admission-control contract broken (bounded "
+                    f"queue no longer retains >=90% goodput at 2x overload "
+                    f"with accept-all degrading below it): "
+                    f"{row.get('derived')!r}")
+            base_p99, p99 = _field(base_row, "p99"), _field(row, "p99")
+            if base_p99 and p99 and p99 > base_p99 * (1.0 + tol):
+                failures.append(
+                    f"{name}: p99 decision latency {p99:.3f} vs baseline "
+                    f"{base_p99:.3f} (+{(p99 / base_p99 - 1) * 100:.0f}% > "
+                    f"{tol * 100:.0f}% tolerance)")
+            base_gr, gr = (_field(base_row, "goodput_retained"),
+                           _field(row, "goodput_retained"))
+            if base_gr and gr is not None and gr < base_gr * (1.0 - tol):
+                failures.append(
+                    f"{name}: goodput retained under overload {gr:.3f} vs "
+                    f"baseline {base_gr:.3f} "
+                    f"(-{(1 - gr / base_gr) * 100:.0f}% > "
+                    f"{tol * 100:.0f}% tolerance)")
 
         if name.startswith("adaptive_bidding_"):
             if "adaptive_ok=True" not in row.get("derived", ""):

@@ -276,6 +276,66 @@ def bench_fault_recovery():
          f"n_committed={r_crash.n_committed}/{r_ref.n_committed}")
 
 
+def bench_service_latency():
+    """Streaming service mode: open-loop Poisson soak SLOs.  Two gated rows
+    (``service_latency_`` prefix in check_regression.py):
+
+    * p99 announce→award decision latency at 0.7x capacity, plus a
+      double-run determinism check (identical award log + stats);
+    * goodput retained under 2.0x overload with bounded-queue admission
+      vs the 1.0x run, with the accept-all control degrading below it
+      (blown QoS deadlines waste capacity).
+    """
+    from repro.core import JasdaScheduler
+    from repro.service import (AcceptAll, BoundedQueue, JasdaService,
+                               PoissonArrivals, ServiceConfig)
+
+    t_end = 240.0 if QUICK else 480.0
+    # cluster capacity ~12 work/s; log-uniform work (8,40) mean ~19.9
+    rate_1x = 12.0 / 19.88
+
+    def soak(rate, admission, qos=0.3, slack=(3.0, 8.0), bucket=512):
+        arr = PoissonArrivals(rate, seed=5, work_range=(8.0, 40.0),
+                              mem_range_gb=(1.0, 12.0), qos_fraction=qos,
+                              deadline_slack=slack)
+        svc = JasdaService(
+            JasdaScheduler(_hetero_slices()), arr,
+            config=ServiceConfig(t_end=t_end, seed=5, max_bucket_m=bucket),
+            admission=admission)
+        stats = svc.run()
+        key = ([(r.round, r.t, r.variant_id, r.job_id, r.slice_id)
+                for r in svc.award_log], stats)
+        return stats, key
+
+    t0 = time.perf_counter()
+    st, key_a = soak(0.7 * rate_1x, AcceptAll())
+    _, key_b = soak(0.7 * rate_1x, AcceptAll())
+    wall = (time.perf_counter() - t0) * 1e6
+    emit("service_latency_p99", wall,
+         f"p50={st.announce_award_p50:.3f} p95={st.announce_award_p95:.3f} "
+         f"p99={st.announce_award_p99:.3f} goodput={st.goodput:.3f} "
+         f"completed={st.n_completed}/{st.n_arrived} "
+         f"deterministic={key_a == key_b}")
+
+    t0 = time.perf_counter()
+    ov = dict(qos=1.0, slack=(1.0, 2.0), bucket=128)
+    base, _ = soak(rate_1x, AcceptAll(), **ov)
+    bounded, _ = soak(2 * rate_1x, BoundedQueue(), **ov)
+    flood, _ = soak(2 * rate_1x, AcceptAll(), **ov)
+    wall = (time.perf_counter() - t0) * 1e6
+    retained = bounded.goodput / max(base.goodput, 1e-9)
+    retained_flood = flood.goodput / max(base.goodput, 1e-9)
+    shed_frac = bounded.n_shed / max(bounded.n_arrived, 1)
+    overload_ok = (retained >= 0.9 and retained_flood < retained - 0.05
+                   and bounded.n_shed > 0)
+    emit("service_latency_overload", wall,
+         f"goodput_retained={retained:.3f} "
+         f"acceptall_retained={retained_flood:.3f} "
+         f"shed_fraction={shed_frac:.3f} "
+         f"expired={flood.n_expired}/{bounded.n_expired} "
+         f"overload_ok={overload_ok}")
+
+
 # ---------------------------------------------------------------------------
 # §4.2.1 calibration
 # ---------------------------------------------------------------------------
@@ -1115,6 +1175,7 @@ BENCHES: Dict[str, Callable] = {
     "window_policies": bench_window_policies,
     "atomization_ft": bench_atomization_ft,
     "fault_recovery": bench_fault_recovery,
+    "service_latency": bench_service_latency,
     "round_throughput": bench_round_throughput,
     "policy_clearing": bench_policy_clearing,
     "adaptive_bidding": bench_adaptive_bidding,
@@ -1129,7 +1190,7 @@ BENCHES: Dict[str, Callable] = {
 QUICK_BENCHES = ("table3_clearing", "round_throughput", "policy_clearing",
                  "adaptive_bidding", "settle_throughput", "score_dispatch",
                  "pipeline_overlap", "shard_scaling", "kernels",
-                 "fault_recovery")
+                 "fault_recovery", "service_latency")
 
 
 def main() -> None:

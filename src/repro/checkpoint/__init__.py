@@ -1,2 +1,2 @@
 """Sharded atomic async checkpointing."""
-from .store import CheckpointStore  # noqa: F401
+from .store import CheckpointError, CheckpointStore  # noqa: F401

@@ -32,7 +32,17 @@ _EXT_DTYPES = {"bfloat16": (ml_dtypes.bfloat16, np.uint16),
                "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
                "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8)}
 
-__all__ = ["CheckpointStore"]
+__all__ = ["CheckpointStore", "CheckpointError"]
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint exists but cannot be loaded (truncated/corrupt blob).
+
+    Distinct from :class:`FileNotFoundError` (no checkpoint at all): a
+    caller seeing this should fall back to an OLDER step rather than
+    cold-start — the store's atomic-rename protocol makes this rare
+    (a half-written step is never visible), but torn disks happen.
+    """
 
 
 class CheckpointStore:
@@ -140,8 +150,23 @@ class CheckpointStore:
         if manifest.get("kind") != "pickle":
             raise ValueError(
                 f"step {step} is an array checkpoint; use restore()")
-        with open(os.path.join(final, "state.pkl"), "rb") as f:
-            return pickle.load(f), step
+        blob_path = os.path.join(final, "state.pkl")
+        try:
+            with open(blob_path, "rb") as f:
+                blob = f.read()
+            expected = manifest.get("n_bytes")
+            if expected is not None and len(blob) != expected:
+                raise CheckpointError(
+                    f"step {step}: state.pkl is {len(blob)} bytes, "
+                    f"manifest says {expected} (truncated write?)")
+            return pickle.loads(blob), step
+        except (EOFError, pickle.UnpicklingError, AttributeError,
+                ImportError, IndexError) as e:
+            # pickle raises a zoo of exceptions on corrupt input; surface
+            # one typed error so restart logic can fall back to an older
+            # step instead of crashing on a bare EOFError
+            raise CheckpointError(
+                f"step {step}: corrupt checkpoint blob ({e})") from e
 
     def wait(self) -> None:
         if self._thread is not None:

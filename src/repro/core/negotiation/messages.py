@@ -49,6 +49,8 @@ __all__ = [
     "LOSS_WINDOW_EMPTY",
     "LOSS_SELF_CONFLICT",
     "LOSS_SLICE_FAILED",
+    "LOSS_SHED",
+    "build_shed_feedback",
 ]
 
 
@@ -113,6 +115,14 @@ LOSS_SELF_CONFLICT = "self_conflict"
 # Like self_conflict it is NOT a market defeat — the bid price was fine;
 # adaptive strategies should re-bid, not shade.
 LOSS_SLICE_FAILED = "slice_failed"
+# admission control shed the job before it could bid (open-loop service
+# back-pressure: the pending pool would have exceeded the largest pow2
+# scoring bucket, or a token-bucket rate limit fired).  Broadcast
+# out-of-round (scheduler.shed_job / the service engine); the report's
+# window is a zero-duration placeholder and its variant_id is the job id —
+# no variant was ever generated.  NOT a market defeat: the job never
+# priced anything.
+LOSS_SHED = "shed"
 
 
 @dataclass(frozen=True)
@@ -268,6 +278,41 @@ def build_feedback(
         calibration_bias=calibration_bias,
         n_selected=len(rr.selected),
         n_conflicts=rr.n_conflicts,
+    )
+
+
+def build_shed_feedback(now: float, job_ids: Sequence[str],
+                        calibrator=None) -> RoundFeedback:
+    """Out-of-round feedback for admission-control sheds (``LOSS_SHED``).
+
+    Mirrors the out-of-round broadcast ``scheduler.revoke_slice`` builds
+    for ``slice_failed``: one :class:`LossReport` per shed job, empty
+    window set (no round ran), a zero-duration placeholder window and the
+    job id standing in for the never-generated variant id.  Shared by
+    ``JasdaScheduler.shed_job`` (queued jobs evicted under back-pressure)
+    and the service engine (arrivals rejected before admission).
+    """
+    losses: Dict[str, Tuple[LossReport, ...]] = {}
+    reliability: Dict[str, float] = {}
+    cal_err: Dict[str, float] = {}
+    cal_bias: Dict[str, float] = {}
+    for job_id in job_ids:
+        losses[job_id] = (
+            LossReport(job_id, Window("", 0.0, now, 0.0), LOSS_SHED),)
+        if calibrator is not None:
+            st = calibrator.state(job_id)
+            reliability[job_id] = float(st.rho)
+            cal_err[job_id] = float(
+                st.mean_error(calibrator.config.error_window))
+            cal_bias[job_id] = float(st.bias)
+        else:
+            reliability[job_id] = 1.0
+            cal_err[job_id] = 0.0
+            cal_bias[job_id] = 0.0
+    return RoundFeedback(
+        t=now, windows=(), cutoffs={}, awards={}, losses=losses,
+        reliability=reliability, calibration_error=cal_err,
+        calibration_bias=cal_bias,
     )
 
 

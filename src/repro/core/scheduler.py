@@ -68,7 +68,8 @@ from .fairness import AgePolicy, AgeTracker
 from .faults import AgentFault
 from .jobs import JobAgent
 from .negotiation import RoundFeedback, WindowAnnouncement, build_feedback
-from .negotiation.messages import LOSS_SLICE_FAILED, LossReport
+from .negotiation.messages import (LOSS_SLICE_FAILED, LossReport,
+                                   build_shed_feedback)
 from .policy import ClearingPolicy, GreedyWIS, Policy
 from .scoring import ScoringPolicy, score_round_async
 from .types import (DEAD_WINDOW_EPS, ClearingResult, Commitment, JobSpec,
@@ -460,6 +461,30 @@ class JasdaScheduler:
                 agent.observe_feedback(feedback)
         self.last_feedback = feedback
         return lost
+
+    def shed_job(self, job_id: str, now: float) -> bool:
+        """Admission-control eviction (open-loop service back-pressure).
+
+        Removes the job from the biddable pool and notifies its agent via
+        an out-of-round :class:`RoundFeedback` carrying one ``shed``
+        :class:`LossReport` (``negotiation.messages.LOSS_SHED``) — the
+        admission-side mirror of :meth:`revoke_slice`'s ``slice_failed``
+        broadcast.  The caller owns any outstanding commitments: queued
+        chunks should be cancelled via ``fail`` (releasing reservations)
+        before shedding; a chunk already running settles harmlessly
+        against the departed agent (``complete``/``fail`` tolerate it).
+        Unlike a settled round, the broadcast does NOT replace
+        ``last_feedback`` (sheds are out-of-band; the last real round's
+        window set must stay visible to revoke_slice's dead-window
+        bookkeeping).  Returns False when the job is unknown.
+        """
+        agent = self.agents.get(job_id)
+        if agent is None:
+            return False
+        self.remove_job(job_id)
+        agent.observe_feedback(
+            build_shed_feedback(now, [job_id], self.calibrator))
+        return True
 
     def degrade_slice(self, slice_id: str, speed_factor: float) -> None:
         """Straggler injection: the slice keeps running at reduced speed.

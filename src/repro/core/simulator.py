@@ -26,12 +26,18 @@ bid/win counts, capacity-violation rate (validates θ).
 """
 from __future__ import annotations
 
-import heapq
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+from .events import EventHeap, ExecutionPlumbing
+from .events import ARRIVE as _ARRIVE
+from .events import COMPLETE as _COMPLETE
+from .events import FAIL as _FAIL
+from .events import FAULT as _FAULT
+from .events import REPAIR as _REPAIR
+from .events import TICK as _TICK
 from .fairness import jain_index
 from .faults import (DEVICE_DISPATCH_FAIL, SCHEDULER_CRASH, SLICE_DEGRADED,
                      SLICE_REVOKED, FaultInjector, FaultPlan)
@@ -107,10 +113,10 @@ class SimResult:
         )
 
 
-# Event kinds, ordered: completions before scheduler ticks at equal time;
-# planned fault events fire AFTER the tick sharing their timestamp (the
-# round at t observes faults injected strictly before t).
-_COMPLETE, _FAIL, _REPAIR, _ARRIVE, _TICK, _FAULT = 0, 1, 2, 3, 4, 5
+# Event kinds live in core/events.py (shared with repro.service): ordered so
+# completions fire before scheduler ticks at equal time and planned fault
+# events fire AFTER the tick sharing their timestamp (the round at t
+# observes faults injected strictly before t).
 
 
 def simulate(
@@ -139,24 +145,18 @@ def simulate(
     to the uninterrupted run under the same plan (tested).
     """
     rng = np.random.default_rng(cfg.seed)
-    events: List[Tuple[float, int, int, object]] = []
-    seq = 0
-
-    def push(t, kind, payload=None):
-        nonlocal seq
-        heapq.heappush(events, (t, kind, seq, payload))
-        seq += 1
+    heap = EventHeap()
 
     for a in agents:
-        push(a.spec.arrival_time, _ARRIVE, a)
-    push(0.0, _TICK)
+        heap.push(a.spec.arrival_time, _ARRIVE, a)
+    heap.push(0.0, _TICK)
 
     # failure schedule (Poisson per slice)
     if cfg.failure_rate > 0:
         for sid in list(scheduler.slices):
             t = rng.exponential(1.0 / cfg.failure_rate)
             while t < cfg.t_end:
-                push(t, _FAIL, sid)
+                heap.push(t, _FAIL, sid)
                 t += cfg.repair_time + rng.exponential(1.0 / cfg.failure_rate)
 
     # deterministic fault plan: slice/device/crash events ride the heap;
@@ -167,7 +167,7 @@ def simulate(
             else FaultInjector(faults)
         scheduler.fault_gate = injector
         for e in injector.scheduled_events():
-            push(e.t, _FAULT, e)
+            heap.push(e.t, _FAULT, e)
 
     # multi-tick round pipelining: JASDA schedulers expose the prepare/settle
     # split; baselines fall back to their serial run_round
@@ -177,43 +177,18 @@ def simulate(
 
         pipe = RoundPipeline(scheduler)
 
-    running: Dict[str, Tuple[Variant, float]] = {}  # slice -> (variant, actual_end)
+    # executor-side state (launch/complete plumbing shared with the service):
+    # running/pending/violations live on the plumbing object so one pickle
+    # graph checkpoints them together with the scheduler they share Variant
+    # identities with
+    ex = ExecutionPlumbing(scheduler, heap, rng,
+                           runtime_cv=cfg.runtime_cv,
+                           check_capacity=cfg.check_capacity)
     dead_slices: Dict[str, SliceSpec] = {}
     jct: Dict[str, float] = {}
     arrival: Dict[str, float] = {}
-    violations = 0
     iterations = 0
     now = 0.0
-
-    def launch(v: Variant, t_now: float) -> None:
-        """Start executing a committed variant whose t_start has arrived.
-
-        Ground-truth runtime = activation + work / (throughput × speed) with
-        log-normal noise — NOT the declared Δt̃ (which is a conservative
-        quantile).  Early finishes release the committed tail back to the
-        timeline (scheduler.complete), so honest-but-safe declarations cost
-        little; overruns lose the tail work beyond the committed end.
-        """
-        nonlocal violations
-        spec = scheduler.slices[v.slice_id].spec
-        agent = scheduler.agents.get(v.job_id)
-        thr = agent.throughput_on(spec.capacity_bytes, spec.n_chips) if agent else 1.0
-        thr = max(thr * spec.speed, 1e-9)
-        activation = float(v.payload.get("activation", 0.0))
-        median = activation + v.payload["work"] / thr
-        sigma = np.sqrt(np.log1p(cfg.runtime_cv**2))
-        actual = float(median * np.exp(rng.normal(-0.5 * sigma**2, sigma)))
-        # truncate to the committed interval: non-preemptive, but the slice is
-        # reclaimed at the committed end regardless (overrun → lost tail work)
-        actual_end = v.t_start + actual
-        if cfg.check_capacity:
-            traj = v.fmp.sample_trajectory(rng)
-            if np.any(traj > scheduler.slices[v.slice_id].spec.capacity_bytes):
-                violations += 1
-        running[v.slice_id] = (v, actual_end)
-        push(max(actual_end, t_now), _COMPLETE, v.slice_id)
-
-    pending: List[Variant] = []  # committed, waiting for t_start
 
     store = checkpoint
     tick_count = 0
@@ -223,10 +198,10 @@ def simulate(
     # skipping it on the re-pop is exactly what makes recovery terminate.
     consumed_crashes: Set[Tuple[float, int]] = set()
 
-    while events:
+    while heap:
         # snapshot BEFORE the tick executes: restore resumes at round k with
         # the heap (including the pending tick itself) exactly as it was
-        if store is not None and events[0][1] == _TICK:
+        if store is not None and heap.peek()[1] == _TICK:
             if tick_count % checkpoint_every == 0:
                 if pipe is not None:
                     pipe.flush()  # speculation holds device handles; flushing
@@ -236,14 +211,11 @@ def simulate(
                 store.save_state(tick_count, {
                     "scheduler": scheduler,
                     "agents": list(agents),
-                    "events": list(events),
-                    "seq": seq,
-                    "running": running,
-                    "pending": pending,
+                    "events": heap,
+                    "exec": ex,
                     "dead_slices": dead_slices,
                     "jct": jct,
                     "arrival": arrival,
-                    "violations": violations,
                     "iterations": iterations,
                     "now": now,
                     "rng": rng,
@@ -252,7 +224,7 @@ def simulate(
                 })
             tick_count += 1
 
-        t, kind, eseq, payload = heapq.heappop(events)
+        t, kind, eseq, payload = heap.pop()
         if t > cfg.t_end:
             break
         now = t
@@ -273,43 +245,17 @@ def simulate(
             else:
                 rr = scheduler.run_round(now)
             if rr is not None and rr.selected:
-                pending.extend(rr.selected)
+                ex.pending.extend(rr.selected)
             # launch any committed variants whose start has arrived
-            still = []
-            for v in pending:
-                if v.slice_id in dead_slices:
-                    continue  # lost with the slice
-                if v.t_start <= now + cfg.iteration_dt and v.slice_id not in running:
-                    launch(v, now)
-                else:
-                    still.append(v)
-            pending = still
+            ex.launch_due(now, cfg.iteration_dt, dead_slices)
             if now + cfg.iteration_dt <= cfg.t_end:
-                push(now + cfg.iteration_dt, _TICK)
+                heap.push(now + cfg.iteration_dt, _TICK)
 
         elif kind == _COMPLETE:
-            sid = payload
-            if sid not in running:
+            done = ex.complete(payload, now)
+            if done is None:
                 continue
-            v, actual_end = running.pop(sid)
-            dur_actual = actual_end - v.t_start
-            # Observed feature values for ex-post verification come from the
-            # job's TRUE profile adjusted by realized runtime — independent of
-            # what was declared, so misreporting is measurable (Eq. 6).
-            truth = dict(v.payload.get("true_features", v.declared_features))
-            observed = dict(truth)
-            ratio = float(np.clip(v.duration / max(dur_actual, 1e-9), 0.0, 1.0))
-            for k in ("jct", "progress"):
-                if k in observed:
-                    observed[k] = float(np.clip(observed[k] * ratio, 0.0, 1.0))
-            overrun = actual_end > v.t_end + 1e-9
-            work = v.payload["work"] * (min(1.0, (v.t_end - v.t_start) / max(dur_actual, 1e-9)) if overrun else 1.0)
-            scheduler.complete(
-                v,
-                observed,
-                work_done=work,
-                actual_end=min(actual_end, v.t_end),
-            )
+            v, _dur = done
             agent = scheduler.agents.get(v.job_id)
             if agent is not None and agent.finished and v.job_id not in jct:
                 jct[v.job_id] = now - arrival[v.job_id]
@@ -319,13 +265,11 @@ def simulate(
             if sid not in scheduler.slices:
                 continue
             spec = scheduler.slices[sid].spec
-            if sid in running:
-                v, _ = running.pop(sid)
-                scheduler.fail(v, now)
+            ex.fail_running(sid, now)
             lost = scheduler.drop_slice(sid, now=now)
-            pending = [p for p in pending if p.slice_id != sid]
+            ex.drop_pending(sid)
             dead_slices[sid] = spec
-            push(now + cfg.repair_time, _REPAIR, sid)
+            heap.push(now + cfg.repair_time, _REPAIR, sid)
 
         elif kind == _REPAIR:
             sid = payload
@@ -340,17 +284,15 @@ def simulate(
                 if sid not in scheduler.slices:
                     continue
                 spec = scheduler.slices[sid].spec
-                if sid in running:
-                    v, _ = running.pop(sid)
-                    scheduler.fail(v, now)
+                ex.fail_running(sid, now)
                 # revoke (vs drop): requeues lost commitments through the
                 # atomizer, retires the slice's windows in the dead-window
                 # registry, and notifies winners via LOSS_SLICE_FAILED
                 scheduler.revoke_slice(sid, now)
-                pending = [p for p in pending if p.slice_id != sid]
+                ex.drop_pending(sid)
                 dead_slices[sid] = spec
                 if e.duration > 0:
-                    push(now + e.duration, _REPAIR, sid)
+                    heap.push(now + e.duration, _REPAIR, sid)
             elif e.kind == SLICE_DEGRADED:
                 if e.target in scheduler.slices:
                     scheduler.degrade_slice(e.target, e.magnitude)
@@ -370,19 +312,16 @@ def simulate(
                 from ..kernels.common import restore_dispatch_faults
 
                 state, _ = store.restore_state()
-                # rebind EVERY loop local from the snapshot — the closures
-                # (push/launch) read these via the shared function scope
+                # rebind EVERY loop local from the snapshot; the plumbing
+                # object restores with its scheduler/heap/rng references
+                # intact (one pickle graph → identities preserved)
                 scheduler = state["scheduler"]
                 agents = state["agents"]
-                events = state["events"]
-                heapq.heapify(events)
-                seq = state["seq"]
-                running = state["running"]
-                pending = state["pending"]
+                heap = state["events"]
+                ex = state["exec"]
                 dead_slices = state["dead_slices"]
                 jct = state["jct"]
                 arrival = state["arrival"]
-                violations = state["violations"]
                 iterations = state["iterations"]
                 now = state["now"]
                 rng = state["rng"]
@@ -446,7 +385,7 @@ def simulate(
         jain_slowdown=jain_index(slowdowns) if slowdowns else 1.0,
         n_finished=len(jct),
         n_jobs=len(agents),
-        capacity_violations=violations,
+        capacity_violations=ex.violations,
         # running totals survive commitment pruning (completed/failed
         # commitments leave the outstanding list; see scheduler.commit_log)
         n_committed=getattr(scheduler, "n_committed_total",

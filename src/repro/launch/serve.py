@@ -6,6 +6,8 @@ CPU/dev: python -m repro.launch.serve --arch olmoe_1b_7b --reduced \
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 import time
 
 import jax
@@ -24,6 +26,10 @@ def main(argv=None):
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="seed for params init and synthetic prompts")
+    ap.add_argument("--json", action="store_true",
+                    help="emit a machine-readable result line")
     args = ap.parse_args(argv)
 
     cfg = reduced(args.arch) if args.reduced else get(args.arch)[0]
@@ -32,10 +38,10 @@ def main(argv=None):
                          "enc-dec/vlm serving needs a memory input per "
                          "request (see serving.engine prefill hooks)")
     model = Model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+    params = model.init(jax.random.PRNGKey(args.seed))
     eng = ServingEngine(model, params, ServeConfig(
         batch_slots=args.slots, max_seq=args.max_seq))
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(args.seed)
     reqs = []
     for i in range(args.requests):
         plen = int(rng.integers(4, args.max_seq // 4))
@@ -46,10 +52,23 @@ def main(argv=None):
     eng.run_until_done()
     wall = time.perf_counter() - t0
     toks = sum(len(r.output) for r in reqs)
-    print(f"{cfg.name}: {len(reqs)} requests, {toks} tokens in {wall:.2f}s "
-          f"({toks/wall:.1f} tok/s)")
-    assert all(r.done for r in reqs)
+    stuck = [r.rid for r in reqs if not r.done]
+    if args.json:
+        print(json.dumps({
+            "arch": cfg.name, "seed": args.seed, "requests": len(reqs),
+            "tokens": toks, "wall_s": round(wall, 4),
+            "tok_per_s": round(toks / wall, 2) if wall > 0 else None,
+            "unfinished": stuck,
+        }))
+    else:
+        print(f"{cfg.name}: {len(reqs)} requests, {toks} tokens in {wall:.2f}s "
+              f"({toks/wall:.1f} tok/s)")
+    if stuck:
+        print(f"error: {len(stuck)} request(s) never finished: "
+              f"{', '.join(stuck)}", file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -1,0 +1,35 @@
+"""Streaming service mode: a long-lived JASDA auction under open-loop load.
+
+See :mod:`repro.service.engine` for the loop, :mod:`repro.service.arrivals`
+for the seeded traffic models, :mod:`repro.service.admission` for
+back-pressure, and :mod:`repro.service.metrics` for the streaming SLO
+quantiles.
+"""
+from .admission import (AcceptAll, AdmissionPolicy, BoundedQueue, TokenBucket,
+                        queue_bound_for_bucket)
+from .arrivals import (ArrivalProcess, BurstArrivals, DeadlineExpired,
+                       DiurnalArrivals, JobArrival, JobCancel, PoissonArrivals)
+from .engine import AwardRecord, JasdaService, ServiceConfig
+from .metrics import JobTimeline, P2Quantile, ServiceMetrics, ServiceStats
+
+__all__ = [
+    "AcceptAll",
+    "AdmissionPolicy",
+    "ArrivalProcess",
+    "AwardRecord",
+    "BoundedQueue",
+    "BurstArrivals",
+    "DeadlineExpired",
+    "DiurnalArrivals",
+    "JasdaService",
+    "JobArrival",
+    "JobCancel",
+    "JobTimeline",
+    "P2Quantile",
+    "PoissonArrivals",
+    "ServiceConfig",
+    "ServiceMetrics",
+    "ServiceStats",
+    "TokenBucket",
+    "queue_bound_for_bucket",
+]
