@@ -54,6 +54,15 @@ Two classes of check:
       degrades below it, exact); the ``p99=`` decision latency and
       ``goodput_retained=`` are gated relative to baseline — both are
       simulated-time metrics, so machine speed cancels entirely.
+    - ``repartition_*``: ``static_identical=True`` must hold (a
+      StaticInventory run is byte-identical to the repartition subsystem
+      being off entirely, exact), ``recovered_ok=True`` must hold
+      (FragmentationAware out-goodputs the static run on the fragmented
+      inventory, exact) and ``energy_ok=True`` must hold (EnergyAware's
+      tick-sampled energy proxy undercuts static with every job still
+      finishing, exact); the recovered ``goodput_frag_aware=`` and the
+      ``energy_ratio=`` are gated relative to baseline (simulated-time
+      metrics).
 
 * **Absolute latency** (loose, default 5x via ``--us-tol``):
   ``us_per_call`` of gated rows against baseline.  Shared CI runners and
@@ -82,7 +91,8 @@ import sys
 
 GATED_PREFIXES = ("round_throughput_", "score_dispatch_", "pipeline_overlap_",
                   "policy_clearing_", "adaptive_bidding_", "settle_throughput_",
-                  "shard_scaling_", "fault_recovery_", "service_latency_")
+                  "shard_scaling_", "fault_recovery_", "service_latency_",
+                  "repartition_")
 
 
 def _load(path: str) -> dict:
@@ -222,6 +232,39 @@ def check(fresh: dict, baseline: dict, tol: float, us_tol: float,
                     f"{name}: goodput retained under overload {gr:.3f} vs "
                     f"baseline {base_gr:.3f} "
                     f"(-{(1 - gr / base_gr) * 100:.0f}% > "
+                    f"{tol * 100:.0f}% tolerance)")
+
+        if name.startswith("repartition_"):
+            # StaticInventory byte-identity and the goodput-recovery /
+            # energy-saving contracts are exact; the recovered goodput and
+            # the energy ratio are gated relative to baseline (simulated-
+            # time metrics: machine speed cancels entirely)
+            for flag, msg in (
+                    ("static_identical",
+                     "StaticInventory run diverged from the subsystem-off "
+                     "run (byte-identity contract broken)"),
+                    ("recovered_ok",
+                     "FragmentationAware no longer recovers goodput over "
+                     "the static fragmented inventory"),
+                    ("energy_ok",
+                     "EnergyAware no longer undercuts the static energy "
+                     "proxy with all jobs finishing")):
+                if (f"{flag}=" in base_row.get("derived", "")
+                        and f"{flag}=True" not in row.get("derived", "")):
+                    failures.append(f"{name}: {msg}: {row.get('derived')!r}")
+            base_gp, gp = (_field(base_row, "goodput_frag_aware"),
+                           _field(row, "goodput_frag_aware"))
+            if base_gp and gp is not None and gp < base_gp * (1.0 - tol):
+                failures.append(
+                    f"{name}: recovered goodput {gp:.3f} vs baseline "
+                    f"{base_gp:.3f} (-{(1 - gp / base_gp) * 100:.0f}% > "
+                    f"{tol * 100:.0f}% tolerance)")
+            base_er, er = (_field(base_row, "energy_ratio"),
+                           _field(row, "energy_ratio"))
+            if base_er and er is not None and er > base_er * (1.0 + tol):
+                failures.append(
+                    f"{name}: energy ratio {er:.3f} vs baseline "
+                    f"{base_er:.3f} (+{(er / base_er - 1) * 100:.0f}% > "
                     f"{tol * 100:.0f}% tolerance)")
 
         if name.startswith("adaptive_bidding_"):

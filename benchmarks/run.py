@@ -26,9 +26,12 @@ quantitative study.  Prints ``name,us_per_call,derived`` CSV rows.
                          count across drifting M / λ / heterogeneous capacities
   pipeline_overlap       double-buffered round pipelining vs serial clearing
                          (host pack/WIS overlapped with device scoring)
+  repartition_packing    dynamic repartitioning: FragmentationAware goodput
+                         recovery on a fragmented inventory + StaticInventory
+                         byte-identity + the EnergyAware proxy (PR 9 tentpole)
   kernels                per-kernel µs/call (CPU interpret / reference paths)
 
-Run: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick]
+Run: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick] [--list]
 Rows are also written to BENCH_results.json (BENCH_quick.json with --quick)
 for CI artifact upload.
 """
@@ -274,6 +277,96 @@ def bench_fault_recovery():
     emit("fault_recovery_crash_replay", wall,
          f"crash_identical={identical} "
          f"n_committed={r_crash.n_committed}/{r_ref.n_committed}")
+
+
+def bench_repartition_packing():
+    """Dynamic repartitioning (core/repartition.py).  Two gated rows
+    (``repartition_`` prefix in check_regression.py):
+
+    * a min_capacity-heavy workload on a packed (2x4-chip) vs fragmented
+      (8x1-chip) inventory: the FragmentationAware policy must recover
+      goodput the fragmented static run strands (``recovered_ok``), the
+      StaticInventory run must be byte-identical to the subsystem being
+      off entirely (``static_identical``), and the fragmentation
+      trajectory is reported peak→end;
+    * EnergyAware consolidate-and-gate on a light workload: the energy
+      proxy must undercut the always-on static run with every job still
+      finishing (``energy_ok``).
+
+    All metrics are simulated-time/score quantities — machine speed
+    cancels entirely.
+    """
+    from repro.core import (EnergyAware, FragmentationAware, JasdaScheduler,
+                            SimConfig, SliceSpec, StaticInventory,
+                            make_workload, simulate)
+
+    GB = 1 << 30
+    n, t_end = (30, 400.0) if QUICK else (80, 1200.0)
+
+    def packed():
+        return [SliceSpec("big0", 20 * GB, n_chips=4),
+                SliceSpec("big1", 20 * GB, n_chips=4)]
+
+    def fragmented():  # the same 8-chip pod, maximally split
+        return [SliceSpec(f"f{k}", 5 * GB, n_chips=1) for k in range(8)]
+
+    def wl():  # ~60% of jobs need more than one 5 GB chip
+        return make_workload(n, seed=3, arrival_rate=0.5,
+                             work_range=(5.0, 40.0), mem_range_gb=(1.0, 4.0),
+                             min_capacity_fraction=0.6,
+                             min_capacity_range_gb=(12.0, 18.0))
+
+    def run(slices, policy):
+        return simulate(JasdaScheduler(slices), wl(),
+                        SimConfig(t_end=t_end, seed=2, repartition=policy))
+
+    def goodput(r):  # completed work per unit horizon (shared across runs)
+        done = sum(r.scheduler.agents[j].spec.total_work for j in r.jct_per_job)
+        return done / t_end
+
+    def key(r):
+        return ([(row.status, row.job_id, row.slice_id, row.t_start,
+                  row.t_end, row.score) for row in r.scheduler.commit_log],
+                r.jct_per_job, r.total_score)
+
+    t0 = time.perf_counter()
+    r_packed = run(packed(), StaticInventory())
+    r_off = run(fragmented(), None)
+    r_static = run(fragmented(), StaticInventory())
+    r_aware = run(fragmented(), FragmentationAware())
+    wall = (time.perf_counter() - t0) * 1e6
+    frags = [f for _, f in r_aware.repartition.frag_trace]
+    emit("repartition_packing", wall,
+         f"goodput_packed={goodput(r_packed):.3f} "
+         f"goodput_frag_static={goodput(r_static):.3f} "
+         f"goodput_frag_aware={goodput(r_aware):.3f} "
+         f"recovered_ok={goodput(r_aware) > goodput(r_static)} "
+         f"static_identical={key(r_off) == key(r_static)} "
+         f"frag_peak={max(frags):.3f} frag_end={frags[-1]:.3f} "
+         f"n_merges={r_aware.repartition.n_merges} "
+         f"finished={r_aware.n_finished}/{r_aware.n_jobs} "
+         f"vs_static={r_static.n_finished}/{r_static.n_jobs}")
+
+    def light():  # fits 1-chip slices; most of the pod sits idle
+        return make_workload(max(n // 4, 6), seed=3, arrival_rate=1.0,
+                             work_range=(5.0, 15.0), mem_range_gb=(1.0, 4.0))
+
+    t0 = time.perf_counter()
+    e_static = simulate(JasdaScheduler(fragmented()), light(),
+                        SimConfig(t_end=t_end, seed=2,
+                                  repartition=StaticInventory()))
+    e_aware = simulate(JasdaScheduler(fragmented()), light(),
+                       SimConfig(t_end=t_end, seed=2,
+                                 repartition=EnergyAware()))
+    wall = (time.perf_counter() - t0) * 1e6
+    ratio = (e_aware.repartition.energy_joules
+             / max(e_static.repartition.energy_joules, 1e-9))
+    st = e_aware.repartition.stats()
+    emit("repartition_energy", wall,
+         f"energy_ratio={ratio:.3f} "
+         f"energy_ok={ratio < 1.0 and e_aware.n_finished == e_aware.n_jobs} "
+         f"n_gates={st['n_gates']:.0f} n_merges={st['n_merges']:.0f} "
+         f"finished={e_aware.n_finished}/{e_aware.n_jobs}")
 
 
 def bench_service_latency():
@@ -1175,6 +1268,7 @@ BENCHES: Dict[str, Callable] = {
     "window_policies": bench_window_policies,
     "atomization_ft": bench_atomization_ft,
     "fault_recovery": bench_fault_recovery,
+    "repartition_packing": bench_repartition_packing,
     "service_latency": bench_service_latency,
     "round_throughput": bench_round_throughput,
     "policy_clearing": bench_policy_clearing,
@@ -1190,7 +1284,7 @@ BENCHES: Dict[str, Callable] = {
 QUICK_BENCHES = ("table3_clearing", "round_throughput", "policy_clearing",
                  "adaptive_bidding", "settle_throughput", "score_dispatch",
                  "pipeline_overlap", "shard_scaling", "kernels",
-                 "fault_recovery", "service_latency")
+                 "fault_recovery", "service_latency", "repartition_packing")
 
 
 def main() -> None:
@@ -1201,9 +1295,15 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke: fast subset + reduced sizes")
+    ap.add_argument("--list", action="store_true",
+                    help="list benchmark names (* = in the --quick subset) and exit")
     ap.add_argument("--json", default=None,
                     help="output path (default BENCH_results.json / BENCH_quick.json)")
     args = ap.parse_args()
+    if args.list:
+        for name in BENCHES:
+            print(f"{name}{' *' if name in QUICK_BENCHES else ''}")
+        return
     QUICK = args.quick
     if args.only and args.only not in BENCHES:
         ap.error(f"unknown benchmark {args.only!r}; choose from: "

@@ -100,6 +100,19 @@ from .policy import (  # noqa: F401
     Policy,
 )
 from .scheduler import CommitRecord, JasdaScheduler, SchedulerConfig  # noqa: F401
+from .repartition import (  # noqa: F401
+    EnergyAware,
+    EnergyModel,
+    FragmentationAware,
+    Move,
+    ProfileLattice,
+    RepartitionCoordinator,
+    RepartitionPolicy,
+    RepartitionState,
+    SliceProfile,
+    StaticInventory,
+    fragmentation_index,
+)
 from .pipeline import RoundPipeline, pipelined_clear_rounds  # noqa: F401
 from .simulator import SimConfig, SimResult, make_workload, simulate  # noqa: F401
 from .baselines import (  # noqa: F401

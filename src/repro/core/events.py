@@ -40,14 +40,18 @@ __all__ = [
     "FAULT",
     "CANCEL",
     "DEADLINE",
+    "REPARTITION",
 ]
 
 # Ordering at equal timestamps: completions before scheduler ticks (the
 # round at t observes everything that finished by t); arrivals before the
 # tick (a job arriving at t bids in the round at t); planned faults and the
 # open-loop cancel/deadline events strictly after the tick sharing their
-# timestamp.
-COMPLETE, FAIL, REPAIR, ARRIVE, TICK, FAULT, CANCEL, DEADLINE = range(8)
+# timestamp.  REPARTITION is last: a repartition opportunity at t runs
+# strictly BETWEEN the round at t and the round at t+dt (the drain-first
+# protocol in core/repartition.py assumes settled state).
+COMPLETE, FAIL, REPAIR, ARRIVE, TICK, FAULT, CANCEL, DEADLINE, \
+    REPARTITION = range(9)
 
 
 class EventHeap:

@@ -279,6 +279,9 @@ class RoundPrep:
     budget: Dict[str, float] = field(default_factory=dict)
     ages: Optional[Dict[str, float]] = None  # A_i(now), reused by settle
     handle: Optional[object] = None  # scoring.ScoreHandle
+    # (F,) host array of ψ_energy per fitting bid when an EnergyModel is
+    # attached (core/repartition.py); None = no energy term (historical)
+    energy: Optional[object] = None
     # in-flight fused first-pass WIS chained on the scoring dispatch
     # (core.wis.SettlePrefetch; device wis_impl + prefetch-capable backend)
     wis_prefetch: Optional[object] = None
@@ -360,6 +363,12 @@ class JasdaScheduler:
         # ``gate(agent, now, attempt)`` raising faults.AgentFault); None =
         # fault-free collection, byte-identical to the historical path
         self.fault_gate = None
+        # repartition-layer inputs (core/repartition.py), both None by
+        # default so the historical behavior is byte-identical:
+        # window_demand feeds the ``frag_aware`` announcement ordering;
+        # energy_model gives ψ_energy a per-slice power figure
+        self.window_demand: Optional[Tuple[float, ...]] = None
+        self.energy_model = None
         # settle-side WIS backend (SchedulerConfig.wis_impl): the default is
         # the historical per-window host loop; the batched backends clear
         # every window of a round in one dispatch (core/wis.py)
@@ -502,6 +511,33 @@ class JasdaScheduler:
             tl.spec, speed=tl.spec.speed * float(speed_factor))
         self._epoch += 1
 
+    def set_window_demand(self, demand) -> None:
+        """Attach the pending pool's capacity-demand histogram (repartition
+        layer) to window announcement.  Only the ``frag_aware`` ordering
+        reads it; a change invalidates speculative preparations exactly
+        like any other announcement input."""
+        demand = tuple(demand) if demand is not None else None
+        if demand != self.window_demand:
+            self.window_demand = demand
+            self._epoch += 1
+
+    def retire_slice(self, slice_id: str, now: float) -> List[Commitment]:
+        """Permanently remove a slice (repartition merge-away/power-gate).
+
+        Runs the full :meth:`revoke_slice` recovery protocol when
+        commitments are outstanding (commit-log ``lost`` rows,
+        ``LOSS_SLICE_FAILED`` feedback), then retires the id's
+        dead-window entries — a slice reborn later under the same
+        canonical id (split/merge cycles reuse interval-derived names)
+        must start with a clean suppression slate.
+        """
+        if any(c.variant.slice_id == slice_id for c in self.commitments):
+            lost = self.revoke_slice(slice_id, now)
+        else:
+            lost = self.drop_slice(slice_id, now=now)
+        self._dead_windows.drop_slice(slice_id)
+        return lost
+
     def invalidate_speculation(self) -> None:
         """Bump the state epoch so in-flight speculative preparations are
         discarded (fault epochs: e.g. a dispatch fault armed between
@@ -545,7 +581,8 @@ class JasdaScheduler:
         """
         self._dead_windows.prune(now)
         window = announce_window(
-            self.slices, now, self.policy.window, exclude=self._dead_windows
+            self.slices, now, self.policy.window, exclude=self._dead_windows,
+            demand=self.window_demand,
         )
         if window is None:
             self._append_log(IterationLog(now, None, 0, 0, 0, 0.0))
@@ -564,7 +601,8 @@ class JasdaScheduler:
         """
         self._dead_windows.prune(now)
         windows = announce_windows(
-            self.slices, now, self.policy.window, exclude=self._dead_windows
+            self.slices, now, self.policy.window, exclude=self._dead_windows,
+            demand=self.window_demand,
         )
         if not windows:
             return RoundPrep(now=now, epoch=self._epoch, windows=[])
@@ -665,6 +703,7 @@ class JasdaScheduler:
         prep.fit, prep.win_idx, prep.view = assign_bids(prep.windows, pool)
         prep.handle = None
         prep.wis_prefetch = None
+        prep.energy = None
         prep.ages = self.ages.ages(prep.now)
         if prep.fit:
             # Step 4a: ONE batched scoring dispatch, left in flight (JAX
@@ -683,17 +722,32 @@ class JasdaScheduler:
                 mesh=self.config.mesh,
                 health=self.backend_health,
             )
+            # ψ_energy (repartition layer): per-bid slice-power feature,
+            # folded into the settled scores on the host.  The Eq. 3 clip
+            # is slack (Σβ ≤ 1, ψ ∈ [0,1]), so the host-side addition is
+            # exactly the batched objective with one more fs column.
+            beta_e = self.policy.scoring.betas.get("energy", 0.0)
+            if self.energy_model is not None and beta_e > 0.0:
+                lam = self.policy.scoring.lam
+                psi = np.array(
+                    [self.energy_model.psi(v.slice_id) for v in prep.fit],
+                    np.float64)
+                prep.energy = (1.0 - lam) * beta_e * psi
             # Step 4a': fused score→clear — with a device wis_impl the
             # ban-free first WIS pass is dispatched right behind the
             # scoring call, consuming the still-in-flight device scores.
             # Settle (and, pipelined, the next round's host prep) then
             # overlaps the whole score+clear chain instead of just scoring.
-            from .wis import predispatch_settle
+            # The energy adjustment lands AFTER the device dispatch, so the
+            # prefetch (which would clear on pre-adjustment scores) is
+            # skipped whenever the term is active.
+            if prep.energy is None:
+                from .wis import predispatch_settle
 
-            prep.wis_prefetch = predispatch_settle(
-                self._wis_selector, self.policy.clearing,
-                len(prep.windows), prep.win_idx, prep.view, prep.handle,
-                ages=prep.ages)
+                prep.wis_prefetch = predispatch_settle(
+                    self._wis_selector, self.policy.clearing,
+                    len(prep.windows), prep.win_idx, prep.view, prep.handle,
+                    ages=prep.ages)
 
     # -- settle half: block on scores, clear, commit ---------------------------
     def _settle_round(self, prep: RoundPrep) -> Optional[RoundResult]:
@@ -701,6 +755,8 @@ class JasdaScheduler:
             self._append_log(IterationLog(prep.now, None, 0, 0, 0, 0.0))
             return None
         scores = prep.handle.result() if prep.handle is not None else np.zeros(0)
+        if prep.energy is not None:
+            scores = scores + prep.energy
         # Step 4b: selection + conflict resolution, dispatched through the
         # configured clearing backend (Policy.clearing; GreedyWIS default)
         # with the configured WIS selector; the fused first-pass prefetch is
@@ -891,6 +947,9 @@ class JasdaScheduler:
         self.__dict__.update(state)
         self._commit_index = {
             id(c.variant): (c, rec) for c, rec in entries}
+        # checkpoints taken before the repartition layer existed
+        self.__dict__.setdefault("window_demand", None)
+        self.__dict__.setdefault("energy_model", None)
 
     # -- reporting ------------------------------------------------------------
     def utilization(self, t_from: float, t_to: float) -> Dict[str, float]:

@@ -66,6 +66,14 @@ class SimConfig:
     # device.  Selections are identical to serial rounds (tested); disable
     # to force the serial reference path.
     pipeline: bool = True
+    # dynamic repartitioning (core/repartition.py): a RepartitionPolicy the
+    # coordinator consults every ``repartition_every`` ticks, BEFORE the
+    # round at that tick (between-rounds semantics).  None disables the
+    # subsystem entirely; StaticInventory runs it but proposes nothing —
+    # both are byte-identical to the pre-repartition simulator (tested).
+    # Requires a pow2-consistent inventory (see ProfileLattice.infer).
+    repartition: Optional[object] = None
+    repartition_every: int = 1
 
 
 @dataclass
@@ -99,6 +107,10 @@ class SimResult:
     # checkpoint restore this is the restored instance, not the one the
     # caller passed in (whose state is pre-crash and stale)
     scheduler: object = field(default=None, repr=False, compare=False)
+    # the RepartitionCoordinator that finished the run (None when
+    # cfg.repartition is None): carries frag_trace, move counters and the
+    # energy proxy for benchmarks/tests
+    repartition: object = field(default=None, repr=False, compare=False)
 
     def summary(self) -> str:
         tag = ""
@@ -184,6 +196,17 @@ def simulate(
     ex = ExecutionPlumbing(scheduler, heap, rng,
                            runtime_cv=cfg.runtime_cv,
                            check_capacity=cfg.check_capacity)
+
+    # dynamic repartitioning: the coordinator owns the buddy layout and
+    # executes policy moves between rounds; its mutations bump the
+    # scheduler epoch, so the pipeline's speculation protocol handles them
+    # like any other state change (no special flush needed)
+    coord = None
+    if cfg.repartition is not None:
+        from .repartition import RepartitionCoordinator
+
+        coord = RepartitionCoordinator(scheduler, cfg.repartition)
+
     dead_slices: Dict[str, SliceSpec] = {}
     jct: Dict[str, float] = {}
     arrival: Dict[str, float] = {}
@@ -221,6 +244,9 @@ def simulate(
                     "rng": rng,
                     "tick_count": tick_count,
                     "armed_faults": dispatch_faults_snapshot(),
+                    # repartition layout + drain queue ride the same pickle
+                    # graph (coordinator references the scheduler above)
+                    "repartition": coord,
                 })
             tick_count += 1
 
@@ -239,6 +265,9 @@ def simulate(
             # auction round clears ALL open windows across all slices —
             # replacing the former 3 × n_slices sequential step() loop.
             iterations += 1
+            if coord is not None and (
+                    (iterations - 1) % max(1, cfg.repartition_every) == 0):
+                coord.tick(now, ex)
             if pipe is not None:
                 nxt = now + cfg.iteration_dt
                 rr = pipe.tick(now, next_time=nxt if nxt <= cfg.t_end else None)
@@ -326,6 +355,7 @@ def simulate(
                 now = state["now"]
                 rng = state["rng"]
                 tick_count = state["tick_count"]
+                coord = state.get("repartition")
                 restore_dispatch_faults(state["armed_faults"])
                 if pipe is not None:
                     pipe = RoundPipeline(scheduler)
@@ -398,6 +428,7 @@ def simulate(
         strategy_stats=strategy_stats,
         iterations=iterations,
         scheduler=scheduler,
+        repartition=coord,
     )
 
 
@@ -417,6 +448,8 @@ def make_workload(
     misreport_fraction: float = 0.0,
     misreport_factor: float = 1.5,
     strategies: Optional[Sequence] = None,
+    min_capacity_fraction: float = 0.0,
+    min_capacity_range_gb: Tuple[float, float] = (8.0, 20.0),
 ) -> List[JobAgent]:
     """Poisson arrivals, log-uniform work, warmup/steady/burst FMPs.
 
@@ -425,6 +458,14 @@ def make_workload(
     robin across the jobs (job i gets ``strategies[i % len(strategies)]``),
     so populations like half-greedy/half-adaptive stay deterministic per
     seed.  None keeps every job on the default GreedyChunking.
+
+    ``min_capacity_fraction`` opens the heterogeneous-capacity axis
+    (profile-sensitive repartition scenarios): that fraction of jobs
+    draws a hard ``JobSpec.min_capacity`` floor from
+    ``min_capacity_range_gb`` — such jobs bid zero on any smaller slice
+    (``jobs.throughput_on``), so they strand on fragmented inventories.
+    The default 0.0 draws nothing from the rng, keeping workloads
+    byte-identical to earlier revisions.
     """
     from .jobs import AgentConfig
     from .trp import fmp_standard
@@ -441,12 +482,16 @@ def make_workload(
         deadline = None
         if rng.uniform() < qos_fraction:
             deadline = t + work * rng.uniform(2.0, 6.0)
+        min_cap = 0.0
+        if min_capacity_fraction > 0.0 and rng.uniform() < min_capacity_fraction:
+            min_cap = rng.uniform(*min_capacity_range_gb) * gb
         spec = JobSpec(
             job_id=f"J{i:03d}",
             arrival_time=t,
             total_work=work,
             fmp=fmp,
             qos_deadline=deadline,
+            min_capacity=min_cap,
         )
         mis = misreport_factor if rng.uniform() < misreport_fraction else 1.0
         strategy = strategies[i % len(strategies)] if strategies else None

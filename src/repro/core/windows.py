@@ -12,6 +12,13 @@ picks:
 * ``best_fit``   — smallest gap that still admits τ_min work first (packs
                    tight gaps before they expire).
 * ``slack``      — gaps on the idlest slice in the horizon first.
+* ``frag_aware`` — tightest capacity fit against the pending pool's
+                   capacity-demand histogram first (anti-fragmentation:
+                   big windows are not nibbled by jobs a small window
+                   could serve).  The demand histogram is supplied by the
+                   repartition layer (``core/repartition.py``); with no
+                   demand attached the ordering degrades to
+                   capacity-ascending (smallest slices first).
 
 :func:`announce_window` (the legacy single-window API, paper A3: one w* per
 iteration) is kept as the head of the same ordering and backs the
@@ -129,7 +136,7 @@ class SliceTimeline:
 
 @dataclass(frozen=True)
 class WindowPolicy:
-    kind: str = "earliest"  # earliest | largest | best_fit | slack
+    kind: str = "earliest"  # earliest | largest | best_fit | slack | frag_aware
     horizon: float = 1000.0  # lookahead for gap derivation
     announce_offset: float = 0.0  # §5.1(a)(i): bid-preparation time offset
     min_gap: float = 1.0  # don't announce gaps shorter than this (≈ τ_min)
@@ -180,6 +187,17 @@ class DeadWindowRegistry:
             abs(t - t_min) <= self.eps for t, _ in self._entries.get(slice_id, ())
         )
 
+    def drop_slice(self, slice_id: str) -> int:
+        """Retire every entry for a slice that permanently left the pool.
+
+        ``prune`` only shrinks entries by expiry, so repeated slice
+        birth/death (repartition split/merge cycles reuse canonical slice
+        ids) would otherwise accumulate suppressions that wrongly mute a
+        NEW slice born under the same id.  Returns the number of entries
+        dropped.
+        """
+        return len(self._entries.pop(slice_id, ()))
+
     def __len__(self) -> int:
         return sum(len(v) for v in self._entries.values())
 
@@ -199,12 +217,25 @@ def _is_excluded(exclude: ExcludeLike, slice_id: str, t_min: float) -> bool:
     return (slice_id, round(t_min, 9)) in exclude
 
 
+def _tight_fit(capacity: float, demand: Optional[Sequence[float]]) -> float:
+    """Slack between a slice's capacity and the tightest pending demand it
+    can serve (``capacity`` itself when no demand fits: such a slice is
+    smaller than every floor, so announcing it early risks stranding
+    nothing — it competes on raw capacity against the fit slacks)."""
+    if demand:
+        fits = [capacity - d for d in demand if d <= capacity]
+        if fits:
+            return min(fits)
+    return capacity
+
+
 def announce_windows(
     slices: Dict[str, SliceTimeline],
     now: float,
     policy: WindowPolicy,
     *,
     exclude: ExcludeLike = None,
+    demand: Optional[Sequence[float]] = None,
 ) -> List[Window]:
     """All eligible windows for this round, ordered by the policy key.
 
@@ -212,12 +243,18 @@ def announce_windows(
     horizon becomes a window; the ``policy.kind`` determines the *order* the
     windows are presented in (ties broken by start time, then slice id, so
     the ordering is deterministic across runs).
+
+    ``demand`` is the pending pool's capacity-demand histogram (a sequence
+    of ``min_capacity`` requirements in bytes) and only affects the
+    ``frag_aware`` ordering; all other kinds ignore it, so their keys are
+    unchanged by its presence.
     """
     t0 = now + policy.announce_offset
     candidates: List[Tuple[tuple, Window]] = []  # (policy key, window)
     for sid in sorted(slices):
         tl = slices[sid]
         idle = None  # lazily computed once per slice for the "slack" kind
+        fit = None  # lazily computed once per slice for "frag_aware"
         for s, e in tl.gaps(t0, policy.horizon):
             if e - s < policy.min_gap:
                 continue
@@ -233,6 +270,10 @@ def announce_windows(
                 if idle is None:
                     idle = tl.idle_fraction(t0, policy.horizon)
                 key = (-idle, s, sid)
+            elif policy.kind == "frag_aware":
+                if fit is None:
+                    fit = _tight_fit(tl.spec.capacity_bytes, demand)
+                key = (fit, s, -(e - s), sid)
             else:
                 raise ValueError(f"unknown window policy {policy.kind}")
             w = Window(slice_id=sid, capacity=tl.spec.capacity_bytes, t_min=s, duration=e - s)
@@ -247,10 +288,11 @@ def announce_window(
     policy: WindowPolicy,
     *,
     exclude: ExcludeLike = None,
+    demand: Optional[Sequence[float]] = None,
 ) -> Optional[Window]:
     """Pick ONE window (legacy A3 semantics): head of the round ordering.
 
     Returns None when no gap of at least ``min_gap`` exists in the horizon.
     """
-    ws = announce_windows(slices, now, policy, exclude=exclude)
+    ws = announce_windows(slices, now, policy, exclude=exclude, demand=demand)
     return ws[0] if ws else None

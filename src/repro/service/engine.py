@@ -36,8 +36,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..core.events import (ARRIVE, CANCEL, COMPLETE, DEADLINE, TICK,
-                           EventHeap, ExecutionPlumbing)
+from ..core.events import (ARRIVE, CANCEL, COMPLETE, DEADLINE, REPARTITION,
+                           TICK, EventHeap, ExecutionPlumbing)
 from ..core.jobs import AgentConfig, JobAgent
 from ..core.negotiation.messages import build_shed_feedback
 from ..core.types import SliceSpec
@@ -71,6 +71,13 @@ class ServiceConfig:
     heartbeat_interval: Optional[float] = None  # None → round_dt
     max_missed: int = 3
     straggler_ratio: float = 0.6
+    # dynamic repartitioning (core/repartition.py): a RepartitionPolicy
+    # ticked on the event heap every ``repartition_dt`` (None → round_dt),
+    # strictly AFTER the round sharing its timestamp (between rounds).
+    # None disables the subsystem; StaticInventory runs it but proposes
+    # nothing — both byte-identical to the pre-repartition service.
+    repartition: object = None
+    repartition_dt: Optional[float] = None
 
 
 @dataclass(frozen=True)
@@ -131,6 +138,15 @@ class JasdaService:
         for sid in scheduler.slices:
             self.monitor.register(sid, 0.0)
         self.heap.push(0.0, TICK)
+        self.repartition = None
+        if self.cfg.repartition is not None:
+            from ..core.repartition import RepartitionCoordinator
+
+            self.repartition = RepartitionCoordinator(
+                scheduler, self.cfg.repartition)
+            # first opportunity at t=0 orders AFTER the first round
+            # (REPARTITION > TICK at equal timestamps)
+            self.heap.push(0.0, REPARTITION)
 
     # -- fault hooks (tests / chaos drivers) -------------------------------
     def mute_slice(self, slice_id: str) -> None:
@@ -181,6 +197,8 @@ class JasdaService:
                 self._on_cancel(payload.job_id, t, expired=False)
             elif kind == DEADLINE:
                 self._on_cancel(payload.job_id, t, expired=True)
+            elif kind == REPARTITION:
+                self._on_repartition(t, horizon)
 
         if pipe is not None:
             pipe.flush()
@@ -242,6 +260,21 @@ class JasdaService:
         self.exec.launch_due(now, cfg.round_dt, self.dead_slices)
         if nxt <= horizon:
             self.heap.push(nxt, TICK)
+
+    def _on_repartition(self, now: float, horizon: float) -> None:
+        """Between-rounds repartition opportunity (periodic heap event).
+
+        Coordinator mutations bump the scheduler epoch, so a pipelined
+        speculative prep built against the old inventory is discarded by
+        the normal validation protocol — no special flush here.
+        """
+        if self.repartition is not None:
+            self.repartition.tick(now, self.exec)
+            nxt = now + (self.cfg.repartition_dt
+                         if self.cfg.repartition_dt is not None
+                         else self.cfg.round_dt)
+            if nxt <= horizon:
+                self.heap.push(nxt, REPARTITION)
 
     def _on_arrival(self, ev: JobArrival, now: float) -> None:
         self.metrics.n_arrived += 1
