@@ -63,6 +63,14 @@ Two classes of check:
       finishing, exact); the recovered ``goodput_frag_aware=`` and the
       ``energy_ratio=`` are gated relative to baseline (simulated-time
       metrics).
+    - ``migration_*``: ``ladder_ok=True`` must hold (the revocation
+      ladder — migrate → preempt-with-credit → revoke-lossy — retains
+      strictly more goodput than drain-only loss under the same seeded
+      revocation schedule, exact) and ``crash_identical=True`` must hold
+      (a crash-at-round-k resume whose restore point spans a completed
+      migration replays byte-identically, exact); ``goodput_retained=``
+      and the ``work_saved=`` fraction are gated relative to baseline
+      (simulated-time metrics).
 
 * **Absolute latency** (loose, default 5x via ``--us-tol``):
   ``us_per_call`` of gated rows against baseline.  Shared CI runners and
@@ -92,7 +100,7 @@ import sys
 GATED_PREFIXES = ("round_throughput_", "score_dispatch_", "pipeline_overlap_",
                   "policy_clearing_", "adaptive_bidding_", "settle_throughput_",
                   "shard_scaling_", "fault_recovery_", "service_latency_",
-                  "repartition_")
+                  "repartition_", "migration_")
 
 
 def _load(path: str) -> dict:
@@ -265,6 +273,38 @@ def check(fresh: dict, baseline: dict, tol: float, us_tol: float,
                 failures.append(
                     f"{name}: energy ratio {er:.3f} vs baseline "
                     f"{base_er:.3f} (+{(er / base_er - 1) * 100:.0f}% > "
+                    f"{tol * 100:.0f}% tolerance)")
+
+        if name.startswith("migration_"):
+            # the revocation-ladder dominance contract and crash-replay
+            # byte-identity across a migration boundary are exact; the
+            # goodput retained vs drain-only and the work-saved fraction
+            # are gated relative to baseline (simulated-time metrics:
+            # machine speed cancels entirely)
+            for flag, msg in (
+                    ("ladder_ok",
+                     "the revocation ladder no longer retains more goodput "
+                     "than drain-only loss under the seeded revocations"),
+                    ("crash_identical",
+                     "crash-at-round-k replay across a migration boundary "
+                     "no longer byte-identical to the uninterrupted run")):
+                if (f"{flag}=" in base_row.get("derived", "")
+                        and f"{flag}=True" not in row.get("derived", "")):
+                    failures.append(f"{name}: {msg}: {row.get('derived')!r}")
+            base_gr, gr = (_field(base_row, "goodput_retained"),
+                           _field(row, "goodput_retained"))
+            if base_gr and gr is not None and gr < base_gr * (1.0 - tol):
+                failures.append(
+                    f"{name}: ladder goodput retained {gr:.3f} vs baseline "
+                    f"{base_gr:.3f} (-{(1 - gr / base_gr) * 100:.0f}% > "
+                    f"{tol * 100:.0f}% tolerance)")
+            base_ws, ws = (_field(base_row, "work_saved"),
+                           _field(row, "work_saved"))
+            if base_ws and ws is not None and ws < base_ws * (1.0 - tol):
+                failures.append(
+                    f"{name}: work saved from re-execution {ws:.3f} vs "
+                    f"baseline {base_ws:.3f} "
+                    f"(-{(1 - ws / base_ws) * 100:.0f}% > "
                     f"{tol * 100:.0f}% tolerance)")
 
         if name.startswith("adaptive_bidding_"):

@@ -29,6 +29,10 @@ quantitative study.  Prints ``name,us_per_call,derived`` CSV rows.
   repartition_packing    dynamic repartitioning: FragmentationAware goodput
                          recovery on a fragmented inventory + StaticInventory
                          byte-identity + the EnergyAware proxy (PR 9 tentpole)
+  migration_recovery     preemption-aware recovery: the revocation ladder
+                         (migrate → preempt-with-credit → revoke-lossy) vs
+                         drain-only loss + crash-identical resume across a
+                         migration boundary (PR 10 tentpole)
   kernels                per-kernel µs/call (CPU interpret / reference paths)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick] [--list]
@@ -367,6 +371,93 @@ def bench_repartition_packing():
          f"energy_ok={ratio < 1.0 and e_aware.n_finished == e_aware.n_jobs} "
          f"n_gates={st['n_gates']:.0f} n_merges={st['n_merges']:.0f} "
          f"finished={e_aware.n_finished}/{e_aware.n_jobs}")
+
+
+def bench_migration_recovery():
+    """Preemption-aware recovery (the revocation ladder).  Two gated rows
+    (``migration_`` prefix in check_regression.py):
+
+    * the same seeded slice-revocation schedule run drain-only vs with
+      the ladder armed (MigrationPlanner + checkpointable jobs): the
+      ladder must retain strictly more goodput (``ladder_ok``), with the
+      work-saved ratio and per-rung counts reported;
+    * a crash-at-round-k checkpoint recovery whose restore point spans a
+      completed migration: the resumed run must replay byte-identically
+      (``crash_identical``).
+
+    All comparison metrics are simulated-time quantities — machine speed
+    cancels.
+    """
+    import tempfile
+
+    from repro.checkpoint import CheckpointStore
+    from repro.core import (FaultEvent, FaultPlan, JasdaScheduler,
+                            MigrationConfig, SimConfig, simulate)
+    from repro.core.faults import SCHEDULER_CRASH
+
+    n, t_end = (60, 1500.0) if QUICK else (160, 4000.0)
+    slices = _hetero_slices()
+    plan = FaultPlan.generate(
+        17, t_end=t_end, slice_ids=[s.slice_id for s in slices],
+        revoke_rate=0.0015, repair_time=60.0)
+    # jobs checkpoint every 8 work units: an interrupted chunk keeps its
+    # completed granules (preempt-with-credit rung)
+    wl = lambda: _workload(n, seed=3, preempt_granularity=8.0)  # noqa: E731
+    cfg_off = SimConfig(t_end=t_end, seed=2)
+    cfg_on = SimConfig(t_end=t_end, seed=2, migration=MigrationConfig())
+
+    t0 = time.perf_counter()
+    r_off = simulate(JasdaScheduler(_hetero_slices()), wl(), cfg_off,
+                     faults=plan)
+    r_on = simulate(JasdaScheduler(_hetero_slices()), wl(), cfg_on,
+                    faults=plan)
+    wall = (time.perf_counter() - t0) * 1e6
+
+    def goodput(r):  # completed useful work per unit makespan
+        done = sum(r.scheduler.agents[j].spec.total_work for j in r.jct_per_job)
+        return done / max(r.makespan, 1e-9)
+
+    retained = goodput(r_on) / max(goodput(r_off), 1e-9)
+    # fraction of the workload's total work the ladder saved from
+    # re-execution (granule credit on doomed chunks; the drain-only run
+    # redoes all of it, paying in makespan)
+    total = sum(a.spec.total_work for a in r_on.scheduler.agents.values())
+    saved = r_on.work_credited / max(total, 1e-9)
+    emit("migration_recovery_ladder", wall,
+         f"goodput_retained={retained:.3f} work_saved={saved:.3f} "
+         f"ladder_ok={goodput(r_on) > goodput(r_off)} "
+         f"n_migrated={r_on.n_migrated} n_preempted={r_on.n_preempted} "
+         f"work_credited={r_on.work_credited:.1f} "
+         f"lost={r_on.n_lost_commitments}/{r_off.n_lost_commitments} "
+         f"finished={r_on.n_finished}/{r_on.n_jobs} "
+         f"vs_drain={r_off.n_finished}/{r_off.n_jobs}")
+
+    crash_plan = FaultPlan(seed=17, events=plan.events + (
+        FaultEvent(t=t_end / 3 + 0.5, kind=SCHEDULER_CRASH),))
+    t0 = time.perf_counter()
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        r_ref = simulate(JasdaScheduler(_hetero_slices()), wl(), cfg_on,
+                         faults=plan,
+                         checkpoint=CheckpointStore(d1), checkpoint_every=25)
+        r_crash = simulate(JasdaScheduler(_hetero_slices()), wl(), cfg_on,
+                           faults=crash_plan,
+                           checkpoint=CheckpointStore(d2), checkpoint_every=25)
+    wall = (time.perf_counter() - t0) * 1e6
+    identical = (r_crash.jct_per_job == r_ref.jct_per_job
+                 and r_crash.calibration == r_ref.calibration
+                 and r_crash.total_score == r_ref.total_score
+                 and (r_crash.n_migrated, r_crash.n_preempted,
+                      r_crash.work_credited)
+                 == (r_ref.n_migrated, r_ref.n_preempted, r_ref.work_credited)
+                 and [(row.status, row.job_id, row.slice_id, row.score)
+                      for row in r_crash.scheduler.commit_log]
+                 == [(row.status, row.job_id, row.slice_id, row.score)
+                     for row in r_ref.scheduler.commit_log])
+    emit("migration_recovery_crash_replay", wall,
+         f"crash_identical={identical} "
+         f"migrated={r_ref.n_migrated} preempted={r_ref.n_preempted} "
+         f"n_committed={r_crash.n_committed}/{r_ref.n_committed}")
 
 
 def bench_service_latency():
@@ -1269,6 +1360,7 @@ BENCHES: Dict[str, Callable] = {
     "atomization_ft": bench_atomization_ft,
     "fault_recovery": bench_fault_recovery,
     "repartition_packing": bench_repartition_packing,
+    "migration_recovery": bench_migration_recovery,
     "service_latency": bench_service_latency,
     "round_throughput": bench_round_throughput,
     "policy_clearing": bench_policy_clearing,
@@ -1284,7 +1376,8 @@ BENCHES: Dict[str, Callable] = {
 QUICK_BENCHES = ("table3_clearing", "round_throughput", "policy_clearing",
                  "adaptive_bidding", "settle_throughput", "score_dispatch",
                  "pipeline_overlap", "shard_scaling", "kernels",
-                 "fault_recovery", "service_latency", "repartition_packing")
+                 "fault_recovery", "service_latency", "repartition_packing",
+                 "migration_recovery")
 
 
 def main() -> None:

@@ -104,6 +104,8 @@ from .repartition import (  # noqa: F401
     EnergyAware,
     EnergyModel,
     FragmentationAware,
+    MigrationConfig,
+    MigrationPlanner,
     Move,
     ProfileLattice,
     RepartitionCoordinator,

@@ -50,7 +50,10 @@ __all__ = [
     "LOSS_SELF_CONFLICT",
     "LOSS_SLICE_FAILED",
     "LOSS_SHED",
+    "LOSS_PREEMPTED",
+    "MIGRATED",
     "build_shed_feedback",
+    "build_migration_feedback",
 ]
 
 
@@ -123,6 +126,18 @@ LOSS_SLICE_FAILED = "slice_failed"
 # no variant was ever generated.  NOT a market defeat: the job never
 # priced anything.
 LOSS_SHED = "shed"
+# the revocation ladder interrupted a RUNNING commitment but credited the
+# completed preempt_granularity granules (scheduler.preempt): only the
+# residual work re-enters the biddable pool.  Broadcast out-of-round by the
+# MigrationPlanner.  Like slice_failed it is NOT a market defeat — the bid
+# price was fine; adaptive strategies should re-bid the residual, not shade.
+LOSS_PREEMPTED = "preempted"
+# the revocation ladder RE-PLACED a commitment's residual work on a
+# compatible surviving slice (scheduler.migrate_commitment): the loss row
+# retires the old variant id and a paired Award row carries the new
+# placement, so bidders' cutoff/calibration state stays honest without the
+# work ever leaving the schedule.  NOT a market defeat.
+MIGRATED = "migrated"
 
 
 @dataclass(frozen=True)
@@ -311,6 +326,53 @@ def build_shed_feedback(now: float, job_ids: Sequence[str],
             cal_bias[job_id] = 0.0
     return RoundFeedback(
         t=now, windows=(), cutoffs={}, awards={}, losses=losses,
+        reliability=reliability, calibration_error=cal_err,
+        calibration_bias=cal_bias,
+    )
+
+
+def build_migration_feedback(now: float, migrations: Sequence = (),
+                             preemptions: Sequence = (),
+                             calibrator=None) -> RoundFeedback:
+    """Out-of-round feedback for the revocation ladder's first two rungs.
+
+    ``migrations`` rows are ``(job_id, old_variant_id, new_variant_id,
+    old_window, new_window, score)``: each emits a ``MIGRATED`` loss
+    retiring the old placement plus an :class:`Award` for the new one (the
+    commit score carries over — migration is not a re-auction).
+    ``preemptions`` rows are ``(job_id, variant_id, window)``: one
+    ``LOSS_PREEMPTED`` report each, the residual work having re-entered
+    the job's biddable pool.  Mirrors :func:`build_shed_feedback`: empty
+    window set (no round ran), calibration state snapshotted per job.
+    """
+    awards: Dict[str, List[Award]] = {}
+    losses: Dict[str, List[LossReport]] = {}
+    for job_id, old_vid, new_vid, old_w, new_w, score in migrations:
+        losses.setdefault(job_id, []).append(
+            LossReport(old_vid, old_w, MIGRATED))
+        awards.setdefault(job_id, []).append(
+            Award(new_vid, new_w, float(score)))
+    for job_id, vid, w in preemptions:
+        losses.setdefault(job_id, []).append(
+            LossReport(vid, w, LOSS_PREEMPTED))
+    reliability: Dict[str, float] = {}
+    cal_err: Dict[str, float] = {}
+    cal_bias: Dict[str, float] = {}
+    for job_id in sorted(set(awards) | set(losses)):
+        if calibrator is not None:
+            st = calibrator.state(job_id)
+            reliability[job_id] = float(st.rho)
+            cal_err[job_id] = float(
+                st.mean_error(calibrator.config.error_window))
+            cal_bias[job_id] = float(st.bias)
+        else:
+            reliability[job_id] = 1.0
+            cal_err[job_id] = 0.0
+            cal_bias[job_id] = 0.0
+    return RoundFeedback(
+        t=now, windows=(), cutoffs={},
+        awards={j: tuple(a) for j, a in awards.items()},
+        losses={j: tuple(l) for j, l in losses.items()},
         reliability=reliability, calibration_error=cal_err,
         calibration_bias=cal_bias,
     )

@@ -63,6 +63,8 @@ __all__ = [
     "EnergyAware",
     "EnergyModel",
     "RepartitionCoordinator",
+    "MigrationConfig",
+    "MigrationPlanner",
     "fragmentation_index",
 ]
 
@@ -555,6 +557,218 @@ class EnergyModel:
 
 
 # ---------------------------------------------------------------------------
+# the graceful revocation ladder: migrate → preempt-with-credit → revoke
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MigrationConfig:
+    """Knobs of the :class:`MigrationPlanner` revocation ladder.
+
+    ``migration_budget`` bounds how many commitments one evacuation may
+    re-place (migration re-commits timelines and re-scores nothing, but
+    each move is still an epoch bump + feedback row — unbounded migration
+    of a hot slice could thrash).  ``horizon`` is the placement lookahead
+    scanned on each candidate slice, ``duration_margin`` the safety factor
+    on the residual's predicted runtime (the original declarations are
+    conservative quantiles; the successor keeps that headroom so it does
+    not trade revocation loss for overrun loss).
+    """
+
+    migration_budget: int = 4
+    horizon: float = 200.0
+    duration_margin: float = 1.25
+
+
+class MigrationPlanner:
+    """Walks the migrate → preempt-with-credit → revoke-lossy ladder.
+
+    One :meth:`evacuate` call handles everything committed to a dying
+    slice, per commitment and in deterministic order:
+
+    1. **migrate** — while the migration budget lasts, try to re-place the
+       commitment's residual work on a compatible surviving slice
+       (capacity ≥ the job's ``min_capacity``, θ-safety via the agent's
+       own memoized check, an idle gap big enough within the horizon, not
+       dead-window suppressed, not overlapping the job's own wins) through
+       ``scheduler.migrate_commitment``;
+    2. **preempt with credit** — a RUNNING commitment whose job declares a
+       ``preempt_granularity`` keeps its completed granules through
+       ``scheduler.preempt`` (calibration ingests the observed partial
+       speed); only the residual re-enters the biddable pool;
+    3. **revoke lossy** — whatever remains takes the historical
+       slice-failure path (``fail_running`` + ``revoke_slice`` +
+       ``drop_pending``), progress torched.
+
+    Rungs 1–2 broadcast ONE out-of-round ``build_migration_feedback`` to
+    the affected agents (``MIGRATED`` award/loss pairs + ``preempted``
+    losses); like sheds it does NOT replace ``scheduler.last_feedback``.
+    With ``migration_budget=0`` and every ``preempt_granularity`` at 0 the
+    ladder degenerates to exactly the historical three-call sequence —
+    byte-identical, which is what lets the planner ride every entry point
+    (fault path, repartition drain, service policing) unconditionally.
+
+    Picklable plain data; checkpointed in the same pickle graph as the
+    scheduler whose Variant identities it manipulates.
+    """
+
+    def __init__(self, scheduler, config: Optional[MigrationConfig] = None):
+        self.scheduler = scheduler
+        self.config = config if config is not None else MigrationConfig()
+        self.n_migrated = 0
+        self.n_preempted = 0
+        self.n_lost = 0
+        self.work_credited = 0.0
+
+    # -- placement search ----------------------------------------------------
+    def _find_placement(self, agent, residual: float, exclude: str,
+                        now: float, activation: float):
+        """Earliest feasible (t_start, slice_id, duration) for the residual,
+        deterministic (slices scanned in sorted order, earliest gap first,
+        ties by slice id) — or None when nothing fits in the horizon."""
+        sched = self.scheduler
+        cfg = self.config
+        best = None
+        for sid in sorted(sched.slices):
+            if sid == exclude:
+                continue
+            tl = sched.slices[sid]
+            spec = tl.spec
+            if spec.capacity_bytes < agent.spec.min_capacity:
+                continue
+            if not agent.is_safe_on(spec.capacity_bytes):
+                continue
+            thr = agent.throughput_on(spec.capacity_bytes, spec.n_chips) * spec.speed
+            if thr <= 0.0:
+                continue
+            need = (activation + residual / thr) * cfg.duration_margin
+            for s, e in tl.gaps(now, cfg.horizon):
+                start = max(s, now)
+                if e - start < need - 1e-12:
+                    continue
+                if sched._dead_windows.suppressed(sid, s):
+                    continue
+                if agent._overlaps_own(start, need):
+                    continue
+                if best is None or (start, sid) < (best[0], best[1]):
+                    best = (start, sid, need)
+                break  # earliest feasible gap per slice is enough
+        return best
+
+    # -- the ladder ----------------------------------------------------------
+    def evacuate(self, slice_id: str, now: float, ex=None) -> Dict[str, int]:
+        """Walk the ladder over everything committed to ``slice_id``, then
+        revoke the slice.  Returns per-rung counts for the caller's
+        metrics (``migrated`` / ``preempted`` / ``lost``)."""
+        import numpy as np
+
+        from .negotiation.messages import build_migration_feedback
+        from .types import Window
+
+        sched = self.scheduler
+        budget = self.config.migration_budget
+        run = ex.running.get(slice_id) if ex is not None else None
+        doomed = sorted(
+            (c for c in sched.commitments if c.variant.slice_id == slice_id),
+            key=lambda c: (c.variant.t_start, c.variant.variant_id))
+        old_tl = sched.slices.get(slice_id)
+        old_cap = old_tl.spec.capacity_bytes if old_tl is not None else 0.0
+        migrations: List[tuple] = []
+        preemptions: List[tuple] = []
+        n_migrated = n_preempted = 0
+        for c in doomed:
+            v = c.variant
+            agent = sched.agents.get(v.job_id)
+            payload = v.payload if isinstance(v.payload, dict) else {}
+            work = float(payload.get("work", 0.0))
+            activation = float(payload.get("activation", 0.0))
+            is_running = run is not None and run[0] is v
+            credited = 0.0
+            observed = None
+            if is_running and agent is not None:
+                g = float(agent.spec.preempt_granularity)
+                actual_end = run[1]
+                if g > 0.0 and now > v.t_start:
+                    frac = float(np.clip(
+                        (now - v.t_start) / max(actual_end - v.t_start, 1e-9),
+                        0.0, 1.0))
+                    credited = min(work, float(int((work * frac) / g)) * g)
+                if credited > 0.0:
+                    # the observed PARTIAL speed (the same truth-scaling
+                    # complete() uses): speed from the full actual runtime,
+                    # progress from the credited fraction
+                    truth = dict(payload.get("true_features",
+                                             v.declared_features))
+                    observed = dict(truth)
+                    ratio = float(np.clip(
+                        v.duration / max(actual_end - v.t_start, 1e-9),
+                        0.0, 1.0))
+                    if "jct" in observed:
+                        observed["jct"] = float(np.clip(
+                            observed["jct"] * ratio, 0.0, 1.0))
+                    if "progress" in observed:
+                        observed["progress"] = float(np.clip(
+                            observed["progress"] * (credited / max(work, 1e-9)),
+                            0.0, 1.0))
+            residual = work - credited
+            old_w = Window(slice_id, old_cap, v.t_start, v.duration)
+            # rung 1: migrate the residual to a surviving slice
+            if budget > 0 and agent is not None and residual > 1e-9:
+                placed = self._find_placement(
+                    agent, residual, slice_id, now, activation)
+                if placed is not None:
+                    t0, sid2, need = placed
+                    new_v = sched.migrate_commitment(
+                        v, now, slice_id=sid2, t_start=t0, duration=need,
+                        residual_work=residual, credited_work=credited,
+                        observed_features=observed)
+                    if new_v is not None:
+                        budget -= 1
+                        n_migrated += 1
+                        self.work_credited += credited
+                        if ex is not None:
+                            if is_running:
+                                ex.running.pop(slice_id, None)
+                                run = None
+                            ex.pending = [p for p in ex.pending if p is not v]
+                            ex.pending.append(new_v)
+                        cap2 = sched.slices[sid2].spec.capacity_bytes
+                        migrations.append((
+                            v.job_id, v.variant_id, new_v.variant_id,
+                            old_w, Window(sid2, cap2, t0, need), c.score))
+                        continue
+            # rung 2: preempt with granule credit (running chunks only)
+            if is_running and credited > 0.0:
+                sched.preempt(v, now, work_done=credited,
+                              observed_features=observed)
+                n_preempted += 1
+                self.work_credited += credited
+                if ex is not None:
+                    ex.running.pop(slice_id, None)
+                run = None
+                preemptions.append((v.job_id, v.variant_id, old_w))
+                continue
+            # rung 3: left for the lossy revocation below
+        if migrations or preemptions:
+            fb = build_migration_feedback(
+                now, migrations, preemptions, sched.calibrator)
+            for job_id in sorted(set(fb.losses) | set(fb.awards)):
+                agent = sched.agents.get(job_id)
+                if agent is not None:
+                    agent.observe_feedback(fb)
+        # the historical slice-failure path mops up whatever is left
+        if ex is not None:
+            ex.fail_running(slice_id, now)
+        lost = sched.revoke_slice(slice_id, now)
+        if ex is not None:
+            ex.drop_pending(slice_id)
+        self.n_migrated += n_migrated
+        self.n_preempted += n_preempted
+        self.n_lost += len(lost)
+        return {"migrated": n_migrated, "preempted": n_preempted,
+                "lost": len(lost)}
+
+
+# ---------------------------------------------------------------------------
 # coordinator: safe execution between rounds
 # ---------------------------------------------------------------------------
 
@@ -576,12 +790,19 @@ class RepartitionCoordinator:
     """
 
     MAX_TRACE = 4096
+    # class-level fallback so coordinators restored from pre-migration
+    # checkpoints (plain __dict__ pickling) still resolve the attribute
+    migration = None
 
     def __init__(self, scheduler, policy: RepartitionPolicy, *,
                  lattice: Optional[ProfileLattice] = None,
-                 drain_grace: int = 2):
+                 drain_grace: int = 2,
+                 migration: Optional[MigrationPlanner] = None):
         self.scheduler = scheduler
         self.policy = policy
+        # revocation ladder for forced drains (None = the historical
+        # fail_running + revoke_slice + drop_pending lossy path)
+        self.migration = migration
         specs = [tl.spec for tl in scheduler.slices.values()]
         self.lattice = lattice if lattice is not None else ProfileLattice.infer(specs)
         self.state = RepartitionState.adopt(specs, self.lattice)
@@ -689,12 +910,15 @@ class RepartitionCoordinator:
             if waited < self.drain_grace:
                 self.draining.append((move, waited + 1))
                 return False
-            for sid in stuck:  # drain grace exhausted: slice-failure path
-                if ex is not None:
-                    ex.fail_running(sid, now)
-                self.scheduler.revoke_slice(sid, now)
-                if ex is not None:
-                    ex.drop_pending(sid)
+            for sid in stuck:  # drain grace exhausted: revocation ladder
+                if self.migration is not None:
+                    self.migration.evacuate(sid, now, ex)
+                else:  # historical lossy slice-failure path
+                    if ex is not None:
+                        ex.fail_running(sid, now)
+                    self.scheduler.revoke_slice(sid, now)
+                    if ex is not None:
+                        ex.drop_pending(sid)
                 self.n_forced += 1
         if move.kind == "split":
             self._do_split(move.targets[0], now, specs[move.targets[0]])
@@ -767,7 +991,7 @@ class RepartitionCoordinator:
 
     # -- reporting ----------------------------------------------------------
     def stats(self) -> Dict[str, float]:
-        return {
+        out = {
             "n_splits": self.n_splits,
             "n_merges": self.n_merges,
             "n_gates": self.n_gates,
@@ -777,3 +1001,7 @@ class RepartitionCoordinator:
             "n_live": len(self.scheduler.slices),
             "n_gated": len(self.state.gated),
         }
+        if self.migration is not None:
+            out["n_migrated"] = self.migration.n_migrated
+            out["n_preempted"] = self.migration.n_preempted
+        return out

@@ -234,8 +234,13 @@ class CommitRecord:
     """Lightweight audit row for one commitment (no variant/FMP retained).
 
     ``status`` tracks the commitment lifecycle: ``active`` →
-    ``completed`` | ``failed`` | ``lost`` (slice died).  On early finishes
-    ``t_end`` is truncated to the actually-executed end.
+    ``completed`` | ``failed`` | ``lost`` (slice died, progress torched) |
+    ``preempted`` (interrupted with partial-progress credit) |
+    ``migrated`` (residual re-placed on another slice; the successor row
+    is a fresh ``active`` commit).  On early finishes ``t_end`` is
+    truncated to the actually-executed end; ``work_credited`` records the
+    granule-aligned progress kept by the preempt/migrate rungs of the
+    revocation ladder (0.0 for every other status).
     """
 
     variant_id: str
@@ -246,6 +251,7 @@ class CommitRecord:
     commit_time: float
     score: float
     status: str = "active"
+    work_credited: float = 0.0
 
     @property
     def interval(self) -> Tuple[float, float]:
@@ -343,6 +349,15 @@ class JasdaScheduler:
         # the most recent RoundFeedback broadcast (negotiation channel)
         self.last_feedback: Optional[RoundFeedback] = None
         self.retired_intervals: Dict[str, List[Tuple[float, float]]] = {}
+        # disruption accounting (the revocation ladder's audit surface):
+        # commitments preempted with credit, migrated to another slice, or
+        # lost outright, plus the total granule-aligned work credited and a
+        # per-reason loss histogram (slice_failed / preempted / migrated)
+        self.n_preempted_total: int = 0
+        self.n_migrated_total: int = 0
+        self.n_lost_total: int = 0
+        self.work_credited_total: float = 0.0
+        self.loss_reasons: Dict[str, int] = {}
         self._dead_windows = DeadWindowRegistry(eps=self.config.dead_window_eps)
         # state version: bumped by EVERY mutation that could change what a
         # future round announces, who bids, or how bids are scored.  The
@@ -413,6 +428,10 @@ class JasdaScheduler:
             agent = self.agents.get(c.variant.job_id)
             if agent is not None:
                 agent.mark_settled(c.variant)  # work becomes biddable again
+        if lost:
+            self.n_lost_total += len(lost)
+            self.loss_reasons["slice_failed"] = (
+                self.loss_reasons.get("slice_failed", 0) + len(lost))
         self._epoch += 1
         return lost
 
@@ -431,7 +450,16 @@ class JasdaScheduler:
         way they observe any other round outcome.  Returns the lost
         commitments (all of whose variants the atomizer will re-chunk on
         the next announcement).
+
+        Idempotent: revoking an already-dead slice (not in the pool, no
+        outstanding commitments) is a strict no-op — no duplicate ``lost``
+        commit rows, no second ``slice_failed`` broadcast, no epoch bump,
+        no dead-window churn.  Fault and repartition paths may race to the
+        same revocation; only the first one observes anything.
         """
+        if slice_id not in self.slices and not any(
+                c.variant.slice_id == slice_id for c in self.commitments):
+            return []
         tl = self.slices.get(slice_id)
         capacity = tl.spec.capacity_bytes if tl is not None else 0.0
         cooldown = now + self.config.dead_window_cooldown
@@ -920,6 +948,126 @@ class JasdaScheduler:
         self._prune_commitment(variant, "failed")
         self._epoch += 1
 
+    def preempt(
+        self,
+        variant: Variant,
+        now: float,
+        *,
+        work_done: float = 0.0,
+        observed_features: Optional[Dict[str, float]] = None,
+    ) -> Optional[CommitRecord]:
+        """Interrupt a committed subjob, keeping granule-aligned progress.
+
+        The preempt-with-credit rung of the revocation ladder: like
+        :meth:`fail` the reservation is released (occupancy kept up to
+        ``now``), but ``work_done`` — the completed ``preempt_granularity``
+        granules, computed by the caller from the observed execution — is
+        credited through ``JobAgent.record_progress``, so only the residual
+        re-enters the biddable pool.  When the caller supplies the partial
+        observation, calibration ingests the OBSERVED partial speed instead
+        of discarding the sample.  The audit row becomes ``preempted`` with
+        ``work_credited`` set and ``t_end`` truncated to the executed end.
+        Returns the audit row, or None for an unknown commitment.
+        """
+        if id(variant) not in self._commit_index:
+            return None
+        if observed_features:
+            self.calibrator.verify(variant, observed_features)
+        tl = self.slices.get(variant.slice_id)
+        if tl is not None:
+            tl.release(variant.t_start, variant.t_end)
+            occupied_until = min(now, variant.t_end)
+            if occupied_until > variant.t_start:
+                tl.commit(variant.t_start, occupied_until)
+        agent = self.agents.get(variant.job_id)
+        if agent is not None:
+            agent.mark_settled(variant)
+            if work_done > 0.0:
+                agent.record_progress(work_done)
+        rec = self._prune_commitment(variant, "preempted")
+        if rec is not None:
+            rec.work_credited = float(work_done)
+            rec.t_end = max(variant.t_start, min(now, variant.t_end))
+        self.n_preempted_total += 1
+        self.work_credited_total += float(work_done)
+        self.loss_reasons["preempted"] = (
+            self.loss_reasons.get("preempted", 0) + 1)
+        self._epoch += 1
+        return rec
+
+    def migrate_commitment(
+        self,
+        variant: Variant,
+        now: float,
+        *,
+        slice_id: str,
+        t_start: float,
+        duration: float,
+        residual_work: float,
+        credited_work: float = 0.0,
+        observed_features: Optional[Dict[str, float]] = None,
+    ) -> Optional[Variant]:
+        """Re-place a commitment's residual work on a surviving slice.
+
+        The migrate rung of the revocation ladder: the old placement is
+        vacated exactly like :meth:`preempt` (occupancy kept to ``now``,
+        ``credited_work`` granules recorded as progress, partial
+        observation fed to calibration), its audit row becomes
+        ``migrated``, and a successor variant carrying ``residual_work``
+        is committed at ``(slice_id, t_start, duration)`` — the commit
+        score carries over, migration is not a re-auction.  The caller
+        owns placement feasibility (capacity, windows, dead-window
+        suppression: :class:`~repro.core.repartition.MigrationPlanner`);
+        this method enforces only the timeline's own no-overlap invariant.
+        Returns the successor variant, or None for an unknown commitment
+        or a target slice not in the pool.
+        """
+        import dataclasses
+
+        entry = self._commit_index.get(id(variant))
+        tl_new = self.slices.get(slice_id)
+        if entry is None or tl_new is None:
+            return None
+        c, _rec = entry
+        if observed_features:
+            self.calibrator.verify(variant, observed_features)
+        tl = self.slices.get(variant.slice_id)
+        if tl is not None:
+            tl.release(variant.t_start, variant.t_end)
+            occupied_until = min(now, variant.t_end)
+            if occupied_until > variant.t_start:
+                tl.commit(variant.t_start, occupied_until)
+        agent = self.agents.get(variant.job_id)
+        if agent is not None:
+            agent.mark_settled(variant)
+            if credited_work > 0.0:
+                agent.record_progress(credited_work)
+        old_rec = self._prune_commitment(variant, "migrated")
+        if old_rec is not None:
+            old_rec.work_credited = float(credited_work)
+            old_rec.t_end = max(variant.t_start, min(now, variant.t_end))
+        payload = (dict(variant.payload)
+                   if isinstance(variant.payload, dict) else {})
+        payload["work"] = float(residual_work)
+        new_v = dataclasses.replace(
+            variant,
+            slice_id=slice_id,
+            t_start=t_start,
+            duration=duration,
+            payload=payload,
+            variant_id=variant.variant_id + "~mig",
+        )
+        tl_new.commit(t_start, t_start + duration)
+        self._record_commit(new_v, now, c.score)
+        if agent is not None:
+            agent.mark_committed(new_v)
+        self.n_migrated_total += 1
+        self.work_credited_total += float(credited_work)
+        self.loss_reasons["migrated"] = (
+            self.loss_reasons.get("migrated", 0) + 1)
+        self._epoch += 1
+        return new_v
+
     # -- checkpointing (crash recovery; checkpoint/store.py) -------------------
     def __getstate__(self):
         """Picklable state for checkpointed crash recovery.
@@ -950,6 +1098,12 @@ class JasdaScheduler:
         # checkpoints taken before the repartition layer existed
         self.__dict__.setdefault("window_demand", None)
         self.__dict__.setdefault("energy_model", None)
+        # checkpoints taken before the preemption/migration subsystem
+        self.__dict__.setdefault("n_preempted_total", 0)
+        self.__dict__.setdefault("n_migrated_total", 0)
+        self.__dict__.setdefault("n_lost_total", 0)
+        self.__dict__.setdefault("work_credited_total", 0.0)
+        self.__dict__.setdefault("loss_reasons", {})
 
     # -- reporting ------------------------------------------------------------
     def utilization(self, t_from: float, t_to: float) -> Dict[str, float]:

@@ -74,6 +74,14 @@ class SimConfig:
     # Requires a pow2-consistent inventory (see ProfileLattice.infer).
     repartition: Optional[object] = None
     repartition_every: int = 1
+    # preemption-aware recovery (core/repartition.py MigrationConfig): when
+    # set, slice revocations and forced repartition drains walk the
+    # migrate → preempt-with-credit → revoke-lossy ladder through a
+    # MigrationPlanner instead of torching in-flight commitments.  None
+    # disables the subsystem; a config with migration_budget=0 combined
+    # with preempt_granularity=0 jobs degenerates to the lossy path
+    # byte-identically (tested).
+    migration: Optional[object] = None
 
 
 @dataclass
@@ -111,6 +119,16 @@ class SimResult:
     # cfg.repartition is None): carries frag_trace, move counters and the
     # energy proxy for benchmarks/tests
     repartition: object = field(default=None, repr=False, compare=False)
+    # disruption accounting (the revocation ladder's audit surface):
+    # commitments preempted with credit / migrated across slices / lost
+    # outright, total granule-aligned work credited, and the per-reason
+    # loss histogram (scheduler.loss_reasons) — all zero/empty on the
+    # default lossy path
+    n_preempted: int = 0
+    n_migrated: int = 0
+    n_lost_commitments: int = 0
+    work_credited: float = 0.0
+    loss_reasons: Dict[str, int] = field(default_factory=dict)
 
     def summary(self) -> str:
         tag = ""
@@ -201,11 +219,23 @@ def simulate(
     # executes policy moves between rounds; its mutations bump the
     # scheduler epoch, so the pipeline's speculation protocol handles them
     # like any other state change (no special flush needed)
+    # preemption-aware recovery: ONE planner walks the revocation ladder on
+    # every forced slice death (fault path + repartition drains); None keeps
+    # the historical lossy path
+    planner = None
+    if cfg.migration is not None:
+        from .repartition import MigrationConfig, MigrationPlanner
+
+        mig_cfg = (cfg.migration if isinstance(cfg.migration, MigrationConfig)
+                   else None)
+        planner = MigrationPlanner(scheduler, mig_cfg)
+
     coord = None
     if cfg.repartition is not None:
         from .repartition import RepartitionCoordinator
 
-        coord = RepartitionCoordinator(scheduler, cfg.repartition)
+        coord = RepartitionCoordinator(scheduler, cfg.repartition,
+                                       migration=planner)
 
     dead_slices: Dict[str, SliceSpec] = {}
     jct: Dict[str, float] = {}
@@ -247,6 +277,10 @@ def simulate(
                     # repartition layout + drain queue ride the same pickle
                     # graph (coordinator references the scheduler above)
                     "repartition": coord,
+                    # migration ladder state (counters + config) rides the
+                    # same graph, so resume across a migration boundary is
+                    # byte-identical
+                    "migration": planner,
                 })
             tick_count += 1
 
@@ -313,12 +347,17 @@ def simulate(
                 if sid not in scheduler.slices:
                     continue
                 spec = scheduler.slices[sid].spec
-                ex.fail_running(sid, now)
-                # revoke (vs drop): requeues lost commitments through the
-                # atomizer, retires the slice's windows in the dead-window
-                # registry, and notifies winners via LOSS_SLICE_FAILED
-                scheduler.revoke_slice(sid, now)
-                ex.drop_pending(sid)
+                if planner is not None:
+                    # revocation ladder: migrate → preempt-with-credit →
+                    # revoke-lossy per commitment (core/repartition.py)
+                    planner.evacuate(sid, now, ex)
+                else:
+                    ex.fail_running(sid, now)
+                    # revoke (vs drop): requeues lost commitments through
+                    # the atomizer, retires the slice's windows in the
+                    # dead-window registry, notifies via LOSS_SLICE_FAILED
+                    scheduler.revoke_slice(sid, now)
+                    ex.drop_pending(sid)
                 dead_slices[sid] = spec
                 if e.duration > 0:
                     heap.push(now + e.duration, _REPAIR, sid)
@@ -356,6 +395,7 @@ def simulate(
                 rng = state["rng"]
                 tick_count = state["tick_count"]
                 coord = state.get("repartition")
+                planner = state.get("migration")
                 restore_dispatch_faults(state["armed_faults"])
                 if pipe is not None:
                     pipe = RoundPipeline(scheduler)
@@ -429,6 +469,11 @@ def simulate(
         iterations=iterations,
         scheduler=scheduler,
         repartition=coord,
+        n_preempted=int(getattr(scheduler, "n_preempted_total", 0)),
+        n_migrated=int(getattr(scheduler, "n_migrated_total", 0)),
+        n_lost_commitments=int(getattr(scheduler, "n_lost_total", 0)),
+        work_credited=float(getattr(scheduler, "work_credited_total", 0.0)),
+        loss_reasons=dict(getattr(scheduler, "loss_reasons", {})),
     )
 
 
@@ -450,6 +495,7 @@ def make_workload(
     strategies: Optional[Sequence] = None,
     min_capacity_fraction: float = 0.0,
     min_capacity_range_gb: Tuple[float, float] = (8.0, 20.0),
+    preempt_granularity: float = 0.0,
 ) -> List[JobAgent]:
     """Poisson arrivals, log-uniform work, warmup/steady/burst FMPs.
 
@@ -465,6 +511,12 @@ def make_workload(
     ``min_capacity_range_gb`` — such jobs bid zero on any smaller slice
     (``jobs.throughput_on``), so they strand on fragmented inventories.
     The default 0.0 draws nothing from the rng, keeping workloads
+    byte-identical to earlier revisions.
+
+    ``preempt_granularity`` sets every job's checkpointable progress
+    granule (``JobSpec.preempt_granularity``, in work units) for the
+    revocation ladder's preempt-with-credit rung.  Assigned uniformly
+    without touching the rng, so the default 0.0 — all-or-nothing — is
     byte-identical to earlier revisions.
     """
     from .jobs import AgentConfig
@@ -492,6 +544,7 @@ def make_workload(
             fmp=fmp,
             qos_deadline=deadline,
             min_capacity=min_cap,
+            preempt_granularity=preempt_granularity,
         )
         mis = misreport_factor if rng.uniform() < misreport_fraction else 1.0
         strategy = strategies[i % len(strategies)] if strategies else None

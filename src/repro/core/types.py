@@ -176,6 +176,12 @@ class JobSpec:
     priority: float = 1.0
     # energy model: joules per unit work (used by the ψ_energy feature)
     energy_per_work: float = 1.0
+    # preemption checkpoint granularity in work units: an interrupted chunk
+    # keeps floor(done / granularity) × granularity of its progress (the
+    # revocation ladder's preempt-with-credit rung).  0.0 — the default —
+    # keeps the historical all-or-nothing semantics byte-identically: an
+    # interruption torches the whole chunk.
+    preempt_granularity: float = 0.0
     metadata: Mapping[str, Any] = field(default_factory=dict)
 
 

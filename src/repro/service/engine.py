@@ -78,6 +78,12 @@ class ServiceConfig:
     # nothing — both byte-identical to the pre-repartition service.
     repartition: object = None
     repartition_dt: Optional[float] = None
+    # preemption-aware recovery (core/repartition.py MigrationPlanner):
+    # a MigrationConfig (or True for defaults) arms the revocation ladder
+    # — dead slices are evacuated (migrate → preempt-with-credit →
+    # revoke-lossy) instead of revoked outright.  None keeps the lossy
+    # PR-7 path byte-identically.
+    migration: object = None
 
 
 @dataclass(frozen=True)
@@ -99,6 +105,10 @@ class JasdaService:
     instance.  The instance is the checkpoint payload: restore with
     :meth:`restore` and call :meth:`run` again to resume mid-stream.
     """
+
+    # pre-migration checkpoints lack the attribute; unpickled instances
+    # fall back to the lossy revocation path
+    migration = None
 
     def __init__(
         self,
@@ -138,12 +148,20 @@ class JasdaService:
         for sid in scheduler.slices:
             self.monitor.register(sid, 0.0)
         self.heap.push(0.0, TICK)
+        self.migration = None
+        if self.cfg.migration is not None:
+            from ..core.repartition import MigrationConfig, MigrationPlanner
+
+            mig_cfg = (self.cfg.migration
+                       if isinstance(self.cfg.migration, MigrationConfig)
+                       else None)
+            self.migration = MigrationPlanner(scheduler, mig_cfg)
         self.repartition = None
         if self.cfg.repartition is not None:
             from ..core.repartition import RepartitionCoordinator
 
             self.repartition = RepartitionCoordinator(
-                scheduler, self.cfg.repartition)
+                scheduler, self.cfg.repartition, migration=self.migration)
             # first opportunity at t=0 orders AFTER the first round
             # (REPARTITION > TICK at equal timestamps)
             self.heap.push(0.0, REPARTITION)
@@ -347,9 +365,14 @@ class JasdaService:
         for sid in self.monitor.dead_slices(now):
             if sid in self.scheduler.slices:
                 spec = self.scheduler.slices[sid].spec
-                self.exec.fail_running(sid, now)
-                self.scheduler.revoke_slice(sid, now)
-                self.exec.drop_pending(sid)
+                if self.migration is not None:
+                    # revocation ladder: migrate what fits elsewhere,
+                    # credit checkpointed progress, lose only the rest
+                    self.migration.evacuate(sid, now, self.exec)
+                else:
+                    self.exec.fail_running(sid, now)
+                    self.scheduler.revoke_slice(sid, now)
+                    self.exec.drop_pending(sid)
                 self.dead_slices[sid] = spec
                 self.metrics.n_revoked_slices += 1
             self.monitor.remove(sid)
@@ -367,5 +390,12 @@ class JasdaService:
         live = [a for a in self.scheduler.agents.values() if not a.finished]
         queue_depth = sum(1 for a in live if a.n_wins == 0)
         backlog = float(sum(a.biddable_work for a in live))
-        return self.metrics.snapshot(self.now, queue_depth=queue_depth,
-                                     backlog_work=backlog)
+        sched = self.scheduler
+        return self.metrics.snapshot(
+            self.now, queue_depth=queue_depth, backlog_work=backlog,
+            n_preempted=getattr(sched, "n_preempted_total", 0),
+            n_migrated=getattr(sched, "n_migrated_total", 0),
+            n_lost_commitments=getattr(sched, "n_lost_total", 0),
+            work_credited=getattr(sched, "work_credited_total", 0.0),
+            loss_reasons=tuple(sorted(
+                getattr(sched, "loss_reasons", {}).items())))

@@ -149,6 +149,16 @@ class ServiceStats:
     announce_award_p50: float
     announce_award_p95: float
     announce_award_p99: float
+    # disruption accounting (the revocation ladder's audit surface),
+    # defaulted at the end so pre-migration snapshots stay comparable:
+    # commitments preempted with credit / migrated across slices / lost
+    # outright, granule-aligned work credited, and the per-reason loss
+    # histogram as sorted (reason, count) pairs (value-comparable)
+    n_preempted: int = 0
+    n_migrated: int = 0
+    n_lost_commitments: int = 0
+    work_credited: float = 0.0
+    loss_reasons: tuple = ()
 
     def summary(self) -> str:
         return (
@@ -217,7 +227,10 @@ class ServiceMetrics:
 
     # -- snapshot ----------------------------------------------------------
     def snapshot(self, now: float, *, queue_depth: int,
-                 backlog_work: float) -> ServiceStats:
+                 backlog_work: float, n_preempted: int = 0,
+                 n_migrated: int = 0, n_lost_commitments: int = 0,
+                 work_credited: float = 0.0,
+                 loss_reasons: tuple = ()) -> ServiceStats:
         elapsed = max(now, 1e-9)
         return ServiceStats(
             t=float(now),
@@ -242,4 +255,9 @@ class ServiceMetrics:
             announce_award_p50=self._announce_award[0.5].value(),
             announce_award_p95=self._announce_award[0.95].value(),
             announce_award_p99=self._announce_award[0.99].value(),
+            n_preempted=int(n_preempted),
+            n_migrated=int(n_migrated),
+            n_lost_commitments=int(n_lost_commitments),
+            work_credited=float(work_credited),
+            loss_reasons=tuple(loss_reasons),
         )

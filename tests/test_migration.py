@@ -1,0 +1,413 @@
+"""Preemption-aware recovery: the revocation ladder end to end.
+
+Covers the PR's tentpole and its regression surface:
+  * idempotent ``revoke_slice`` (fault and repartition paths may race to
+    the same revocation — only the first observes anything);
+  * the executor truncation path (overrun credits only the committed
+    fraction; early finishes credit full work and truncate the audit row);
+  * partial-progress credit through ``scheduler.preempt`` (granule
+    accounting, biddable-pool arithmetic, ``preempted`` audit rows);
+  * cross-slice live migration through ``scheduler.migrate_commitment``
+    (residual re-placement, score carry-over, pool conservation);
+  * the full ladder under a slice revocation retaining work the lossy
+    path torches, with disruption counters surfaced on SimResult;
+  * byte-identity of the DEGENERATE ladder (budget 0, granularity 0)
+    with the historical slice-failure path — simulator serial AND
+    pipelined, and a service soak through health policing;
+  * a work-conservation property (hypothesis when available, seeded
+    sweep otherwise): credited progress never exceeds declared work;
+  * crash-checkpoint byte-identical resume ACROSS a migration boundary
+    (serial AND pipelined) and planner pickling in the scheduler graph.
+
+CI runs this file across seeds via JASDA_CHAOS_SEED (see the chaos job
+in .github/workflows/ci.yml).
+"""
+import os
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointStore
+from repro.core import (FaultEvent, FaultPlan, JasdaScheduler,
+                        MigrationConfig, MigrationPlanner, SimConfig,
+                        SliceSpec, make_workload, simulate)
+from repro.core.events import EventHeap, ExecutionPlumbing
+from repro.core.faults import SCHEDULER_CRASH, SLICE_REVOKED
+from repro.service import (AcceptAll, JasdaService, PoissonArrivals,
+                           ServiceConfig)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAS_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional dependency
+    HAS_HYPOTHESIS = False
+
+SEED = int(os.environ.get("JASDA_CHAOS_SEED", "0"))
+GB = 1 << 30
+
+
+def _slices(n=4, cap_gb=16):
+    return [SliceSpec(f"S{k}", cap_gb * GB, flops_per_s=1.0, hbm_bw=1.0)
+            for k in range(n)]
+
+
+def _workload(n=14, granularity=0.0, seed=None):
+    return make_workload(n, seed=SEED + 1 if seed is None else seed,
+                         arrival_rate=0.5, work_range=(20.0, 60.0),
+                         mem_range_gb=(1.0, 8.0),
+                         preempt_granularity=granularity)
+
+
+def _commit_rows(sched):
+    return [(r.status, r.job_id, r.slice_id, r.t_start, r.t_end, r.score)
+            for r in sched.commit_log]
+
+
+def _sim_key(r):
+    return (_commit_rows(r.scheduler), r.jct_per_job, r.n_finished,
+            r.total_score)
+
+
+def _revoke_plan(t=30.5):
+    """One deterministic mid-stream slice death (no repair)."""
+    return FaultPlan(seed=SEED, events=(
+        FaultEvent(t=t, kind=SLICE_REVOKED, target="S0"),))
+
+
+def _busy_sched(n_jobs=10, granularity=0.0):
+    sched = JasdaScheduler(_slices())
+    for a in _workload(n_jobs, granularity=granularity):
+        sched.add_job(a, 0.0)
+    for k in range(3):
+        sched.run_round(float(k))
+    assert sched.commitments
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# idempotent revocation
+# ---------------------------------------------------------------------------
+
+class TestIdempotentRevocation:
+    def test_double_revoke_is_a_strict_noop(self):
+        sched = _busy_sched()
+        sid = sched.commitments[0].variant.slice_id
+        lost = sched.revoke_slice(sid, 3.0)
+        assert lost and sid not in sched.slices
+        rows = _commit_rows(sched)
+        epoch = sched._epoch
+        fb = sched.last_feedback
+        n_lost = sched.n_lost_total
+        # the second revocation (a fault/repartition race) observes nothing
+        assert sched.revoke_slice(sid, 4.0) == []
+        assert _commit_rows(sched) == rows  # no duplicate ``lost`` rows
+        assert sched._epoch == epoch  # no epoch churn
+        assert sched.last_feedback is fb  # no second broadcast
+        assert sched.n_lost_total == n_lost
+        assert sched.loss_reasons.get("slice_failed") == len(lost)
+
+    def test_revoking_unknown_slice_is_a_noop(self):
+        sched = JasdaScheduler(_slices())
+        epoch = sched._epoch
+        assert sched.revoke_slice("nope", 0.0) == []
+        assert sched._epoch == epoch
+
+
+# ---------------------------------------------------------------------------
+# executor truncation (core/events.py complete())
+# ---------------------------------------------------------------------------
+
+class TestExecutorTruncation:
+    def _committed(self):
+        sched = JasdaScheduler(_slices())
+        ex = ExecutionPlumbing(sched, EventHeap(),
+                               np.random.default_rng(SEED),
+                               runtime_cv=0.0, check_capacity=False)
+        for a in _workload(8):
+            sched.add_job(a, 0.0)
+        rr = sched.run_round(0.0)
+        assert rr.selected
+        return sched, ex, rr.selected[0]
+
+    def test_overrun_credits_only_the_committed_fraction(self):
+        sched, ex, v = self._committed()
+        agent = sched.agents[v.job_id]
+        work = float(v.payload["work"])
+        dur_actual = 2.0 * (v.t_end - v.t_start)  # 2x overrun
+        ex.running[v.slice_id] = (v, v.t_start + dur_actual)
+        out = ex.complete(v.slice_id, v.t_start + dur_actual)
+        assert out is not None and out[0] is v
+        # the tail beyond the committed end is lost work
+        assert agent.work_done == pytest.approx(
+            work * (v.t_end - v.t_start) / dur_actual)
+        row = [r for r in sched.commit_log if r.status == "completed"][0]
+        assert row.t_end == pytest.approx(v.t_end)  # slice reclaimed on time
+
+    def test_early_finish_credits_full_work_and_truncates_row(self):
+        sched, ex, v = self._committed()
+        agent = sched.agents[v.job_id]
+        dur_actual = 0.5 * (v.t_end - v.t_start)
+        ex.running[v.slice_id] = (v, v.t_start + dur_actual)
+        ex.complete(v.slice_id, v.t_start + dur_actual)
+        assert agent.work_done == pytest.approx(float(v.payload["work"]))
+        row = [r for r in sched.commit_log if r.status == "completed"][0]
+        assert row.t_end == pytest.approx(v.t_start + dur_actual)
+
+    def test_vacated_slice_completion_is_none(self):
+        sched, ex, v = self._committed()
+        assert ex.complete(v.slice_id, 10.0) is None  # never launched
+
+
+# ---------------------------------------------------------------------------
+# partial-progress credit (scheduler.preempt)
+# ---------------------------------------------------------------------------
+
+class TestPartialProgressCredit:
+    def test_preempt_credits_work_and_audits(self):
+        sched = _busy_sched(granularity=5.0)
+        c = sched.commitments[0]
+        v = c.variant
+        agent = sched.agents[v.job_id]
+        work = float(v.payload["work"])
+        credit = min(5.0, work)
+        biddable_before = agent.biddable_work
+        mid = 0.5 * (v.t_start + v.t_end)
+        rec = sched.preempt(v, mid, work_done=credit)
+        assert rec is not None and rec.status == "preempted"
+        assert rec.work_credited == pytest.approx(credit)
+        assert rec.t_end == pytest.approx(mid)
+        # only the residual re-enters the biddable pool
+        assert agent.work_done == pytest.approx(credit)
+        assert agent.biddable_work == pytest.approx(
+            biddable_before + work - credit)
+        assert sched.n_preempted_total == 1
+        assert sched.work_credited_total == pytest.approx(credit)
+        assert sched.loss_reasons == {"preempted": 1}
+
+    def test_preempt_unknown_commitment_returns_none(self):
+        sched = _busy_sched()
+        v = sched.commitments[0].variant
+        sched.fail(v, 1.0)  # already settled
+        assert sched.preempt(v, 2.0, work_done=1.0) is None
+
+    def test_zero_granularity_keeps_all_or_nothing(self):
+        # the default JobSpec declares no checkpoint granularity
+        for a in _workload(4):
+            assert a.spec.preempt_granularity == 0.0
+        # and a granular workload carries it through
+        for a in _workload(4, granularity=3.0):
+            assert a.spec.preempt_granularity == 3.0
+
+
+# ---------------------------------------------------------------------------
+# cross-slice live migration (scheduler.migrate_commitment)
+# ---------------------------------------------------------------------------
+
+class TestLiveMigration:
+    def test_migrate_moves_residual_and_preserves_score(self):
+        sched = _busy_sched(granularity=5.0)
+        c = sched.commitments[0]
+        v = c.variant
+        agent = sched.agents[v.job_id]
+        work = float(v.payload["work"])
+        credit, residual = 5.0, work - 5.0
+        target = next(s for s in sorted(sched.slices) if s != v.slice_id)
+        t0 = 500.0  # far future: trivially idle on the target
+        biddable_before = agent.biddable_work
+        new_v = sched.migrate_commitment(
+            v, 2.0, slice_id=target, t_start=t0, duration=30.0,
+            residual_work=residual, credited_work=credit)
+        assert new_v is not None
+        assert new_v.slice_id == target
+        assert new_v.variant_id == v.variant_id + "~mig"
+        assert float(new_v.payload["work"]) == pytest.approx(residual)
+        # migration is not a re-auction: the commit score carries over
+        succ = [d for d in sched.commitments if d.variant is new_v][0]
+        assert succ.score == pytest.approx(c.score)
+        old_row = [r for r in sched.commit_log if r.status == "migrated"][0]
+        assert old_row.work_credited == pytest.approx(credit)
+        # pool conservation: outstanding swapped W → residual, done +credit
+        assert agent.work_done == pytest.approx(credit)
+        assert agent.biddable_work == pytest.approx(biddable_before)
+        # the target timeline actually holds the successor's reservation
+        with pytest.raises(ValueError):
+            sched.slices[target].commit(t0, t0 + 1.0)
+        assert sched.n_migrated_total == 1
+
+    def test_migrate_to_unknown_slice_returns_none(self):
+        sched = _busy_sched()
+        v = sched.commitments[0].variant
+        assert sched.migrate_commitment(
+            v, 1.0, slice_id="nope", t_start=5.0, duration=5.0,
+            residual_work=1.0) is None
+
+
+# ---------------------------------------------------------------------------
+# the ladder under fire
+# ---------------------------------------------------------------------------
+
+class TestRevocationLadder:
+    def test_ladder_retains_work_the_lossy_path_torches(self):
+        agents = lambda: _workload(14, granularity=4.0)  # noqa: E731
+        r_off = simulate(JasdaScheduler(_slices()), agents(),
+                         SimConfig(t_end=250.0, seed=SEED),
+                         faults=_revoke_plan())
+        r_on = simulate(JasdaScheduler(_slices()), agents(),
+                        SimConfig(t_end=250.0, seed=SEED,
+                                  migration=MigrationConfig()),
+                        faults=_revoke_plan())
+        # the ladder actually fired, and its rungs are accounted
+        assert r_on.n_migrated + r_on.n_preempted > 0
+        assert r_off.n_migrated == r_off.n_preempted == 0
+        # the lossy run torches every doomed chunk (queued ones as
+        # ``slice_failed`` losses, the running one as a creditless
+        # ``failed`` row); the ladder run saves work from them — either
+        # re-placed residuals or granule credit
+        assert r_off.work_credited == 0.0
+        assert r_on.n_lost_commitments <= r_off.n_lost_commitments
+        assert r_on.n_migrated > 0 or r_on.work_credited > 0.0
+
+    def test_planner_counters_match_scheduler_ledger(self):
+        r = simulate(JasdaScheduler(_slices()),
+                     _workload(14, granularity=4.0),
+                     SimConfig(t_end=200.0, seed=SEED,
+                               migration=MigrationConfig()),
+                     faults=_revoke_plan())
+        sched = r.scheduler
+        assert r.n_migrated == sched.n_migrated_total
+        assert r.n_preempted == sched.n_preempted_total
+        assert r.n_lost_commitments == sched.n_lost_total
+        assert r.work_credited == pytest.approx(sched.work_credited_total)
+        # the per-reason histogram sums to the event counters
+        reasons = dict(r.loss_reasons)
+        assert reasons.get("migrated", 0) == r.n_migrated
+        assert reasons.get("preempted", 0) == r.n_preempted
+        # every audit credit is non-negative and the ledger sums exactly
+        credits = [getattr(rec, "work_credited", 0.0)
+                   for rec in sched.commit_log]
+        assert all(w >= 0.0 for w in credits)
+        assert sum(credits) == pytest.approx(sched.work_credited_total)
+
+
+# ---------------------------------------------------------------------------
+# byte-identity of the degenerate ladder
+# ---------------------------------------------------------------------------
+
+class TestStaticIdentity:
+    @pytest.mark.parametrize("pipeline", [False, True])
+    def test_degenerate_ladder_identical_to_lossy_path(self, pipeline):
+        agents = lambda: _workload(14)  # noqa: E731  (granularity 0)
+        r0 = simulate(JasdaScheduler(_slices()), agents(),
+                      SimConfig(t_end=200.0, seed=SEED, pipeline=pipeline),
+                      faults=_revoke_plan(t=25.5))
+        r1 = simulate(JasdaScheduler(_slices()), agents(),
+                      SimConfig(t_end=200.0, seed=SEED, pipeline=pipeline,
+                                migration=MigrationConfig(
+                                    migration_budget=0)),
+                      faults=_revoke_plan(t=25.5))
+        assert _sim_key(r0) == _sim_key(r1)
+        assert r1.n_migrated == 0 and r1.n_preempted == 0
+
+    def test_service_soak_identical_through_policing(self):
+        def soak(migration):
+            arr = PoissonArrivals(0.6, seed=SEED, work_range=(8.0, 40.0),
+                                  mem_range_gb=(1.0, 8.0))
+            cfg = ServiceConfig(t_end=80.0, seed=SEED, migration=migration)
+            svc = JasdaService(JasdaScheduler(_slices()), arr,
+                               config=cfg, admission=AcceptAll())
+            svc.mute_slice("S0")  # policed dead after max_missed beats
+            stats = svc.run()
+            assert stats.n_revoked_slices == 1  # the ladder entry fired
+            return ([(r.round, r.t, r.variant_id, r.job_id, r.slice_id)
+                     for r in svc.award_log], stats)
+
+        # Poisson jobs declare no granularity, so a budget-0 ladder must
+        # degenerate to the historical lossy path byte-for-byte — the
+        # ServiceStats snapshots (counters included) compare equal
+        assert soak(None) == soak(MigrationConfig(migration_budget=0))
+
+
+# ---------------------------------------------------------------------------
+# work conservation (property-based when hypothesis is available)
+# ---------------------------------------------------------------------------
+
+def _assert_conservation(seed):
+    plan = FaultPlan.generate(seed, t_end=150.0,
+                              slice_ids=[f"S{k}" for k in range(4)],
+                              revoke_rate=0.004)
+    r = simulate(JasdaScheduler(_slices()),
+                 _workload(12, granularity=3.0, seed=seed + 1),
+                 SimConfig(t_end=150.0, seed=seed,
+                           migration=MigrationConfig()),
+                 faults=plan)
+    for a in r.scheduler.agents.values():
+        # credited progress never exceeds the declared work, never negative
+        assert -1e-6 <= a.work_done <= a.spec.total_work + 1e-6
+        if a.finished:
+            assert a.work_done >= a.spec.total_work - 1e-6
+    # credits only accrue (record_progress adds granules, never subtracts):
+    # every audit row's credit is non-negative and the ledger is exact
+    credits = [getattr(rec, "work_credited", 0.0)
+               for rec in r.scheduler.commit_log]
+    assert all(w >= 0.0 for w in credits)
+    assert r.work_credited == pytest.approx(sum(credits))
+
+
+if HAS_HYPOTHESIS:
+
+    @settings(max_examples=5, deadline=None)
+    @given(st.integers(min_value=0, max_value=12))
+    def test_progress_conservation_property(seed):
+        _assert_conservation(seed)
+
+else:  # pragma: no cover - exercised only without hypothesis
+
+    @pytest.mark.parametrize("seed", [SEED, SEED + 1, SEED + 2])
+    def test_progress_conservation_seeded(seed):
+        _assert_conservation(seed)
+
+
+# ---------------------------------------------------------------------------
+# durability: crash resume across a migration boundary
+# ---------------------------------------------------------------------------
+
+class TestDurability:
+    @pytest.mark.parametrize("pipeline", [False, True])
+    def test_crash_resume_across_migration_boundary(self, pipeline, tmp_path):
+        revoke = (FaultEvent(t=30.5, kind=SLICE_REVOKED, target="S0"),)
+
+        def run(tag, crash):
+            events = revoke + ((
+                FaultEvent(t=45.5, kind=SCHEDULER_CRASH),) if crash else ())
+            cfg = SimConfig(t_end=220.0, seed=SEED, pipeline=pipeline,
+                            migration=MigrationConfig())
+            store = CheckpointStore(str(tmp_path / f"{tag}_{pipeline}"))
+            return simulate(JasdaScheduler(_slices()),
+                            _workload(14, granularity=4.0), cfg,
+                            faults=FaultPlan(seed=SEED, events=events),
+                            checkpoint=store, checkpoint_every=5)
+
+        ref = run("ref", False)
+        # the crash restores state that includes a completed migration
+        assert ref.n_migrated + ref.n_preempted > 0
+        crash = run("crash", True)
+        assert _sim_key(crash) == _sim_key(ref)
+        assert (crash.n_migrated, crash.n_preempted,
+                crash.n_lost_commitments) == (
+            ref.n_migrated, ref.n_preempted, ref.n_lost_commitments)
+        assert crash.work_credited == pytest.approx(ref.work_credited)
+
+    def test_planner_pickles_with_scheduler(self):
+        sched = _busy_sched(granularity=5.0)
+        planner = MigrationPlanner(sched)
+        sid = sched.commitments[0].variant.slice_id
+        planner.evacuate(sid, 3.0)
+        sched2, planner2 = pickle.loads(pickle.dumps((sched, planner)))
+        assert planner2.scheduler is sched2  # one graph, identity kept
+        assert (planner2.n_migrated, planner2.n_preempted,
+                planner2.n_lost) == (planner.n_migrated,
+                                     planner.n_preempted, planner.n_lost)
+        assert planner2.config == planner.config
